@@ -1,0 +1,73 @@
+"""Pass ablations: each optimization pass toggled off, measuring node
+count, memory-plan arena and runtime on the Table-1 suite — the paper's
+§3 design claims, quantified one mechanism at a time."""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+import jax
+
+from repro.core import CompiledModel
+from repro.core.passes import DEFAULT_PIPELINE
+
+from .table1_models import SUITE
+
+VARIANTS = {
+    "full": DEFAULT_PIPELINE,
+    "no_bn_fold": tuple(p for p in DEFAULT_PIPELINE
+                        if p != "fold_batchnorm"),
+    "no_act_fusion": tuple(p for p in DEFAULT_PIPELINE
+                           if p != "fuse_activation"),
+    "no_pad_merge": tuple(p for p in DEFAULT_PIPELINE if p != "fuse_pad"),
+    "no_layout": tuple(p for p in DEFAULT_PIPELINE
+                       if p != "optimize_layout"),
+    "none": ("canonicalize",),
+}
+
+
+def run(models=("C-BH", "MobileNetV2"), reps: int = 15) -> List[Dict]:
+    rng = np.random.default_rng(0)
+    rows = []
+    for name in models:
+        g = SUITE[name]()
+        in_name = next(iter(g.inputs))
+        x = rng.standard_normal((1,) + g.inputs[in_name].shape) \
+            .astype(np.float32)
+        for variant, passes in VARIANTS.items():
+            cm = CompiledModel(g, passes=passes)
+            fn = cm.compile(batch_size=1)
+            for _ in range(3):
+                jax.block_until_ready(fn(x))
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(fn(x))
+            dt = (time.perf_counter() - t0) / reps
+            rows.append({
+                "model": name,
+                "variant": variant,
+                "nodes": len(cm.graph.nodes),
+                "arena_kb": cm.report["memory_plan"]["arena_bytes"] / 1024,
+                "inplace": cm.report["memory_plan"]["inplace_count"],
+                "time_ms": dt * 1e3,
+            })
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    hdr = f"{'model':<12} {'variant':<14} {'nodes':>6} {'arena KB':>9} " \
+          f"{'inplace':>8} {'ms/call':>8}"
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        print(f"{r['model']:<12} {r['variant']:<14} {r['nodes']:>6} "
+              f"{r['arena_kb']:>9.1f} {r['inplace']:>8} "
+              f"{r['time_ms']:>8.3f}")
+
+
+if __name__ == "__main__":
+    main()

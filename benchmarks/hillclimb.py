@@ -1,0 +1,120 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimbing driver: lower a cell under a series of cumulative
+optimization variants and report the three roofline terms per variant.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen-train
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+
+# Each series: (name, cfg overrides, train overrides, rules overrides)
+# applied CUMULATIVELY on top of the previous variant.
+SERIES = {
+    # Cell 1: flagship dense training (paper-representative: the whole
+    # point of compile-time specialization is the steady-state step).
+    "qwen-train": {
+        "arch": "qwen2.5-14b", "shape": "train_4k",
+        "steps": [
+            # NOTE: "baseline" here already contains the unconditional
+            # dtype-pinning fixes (bf16 TP reduces / bf16 rope); compare
+            # against the dry-run artifact for the original baseline.
+            ("baseline", {}, {}, {}),
+            ("causal-skip", {"causal_skip": True}, {}, {}),
+            ("bf16-attn", {"attn_compute_dtype": "bfloat16"}, {}, {}),
+            ("bf16-params", {}, {"cast_params": True}, {}),
+            ("colrow-psum", {"tp_psum": True}, {}, {}),
+            ("pregather-mb16", {},
+             {"pregather_params": True, "microbatches": 16}, {}),
+        ],
+    },
+    # Cell 2: most collective-bound (MoE + MLA at 671B).
+    "dsv3-train": {
+        "arch": "deepseek-v3-671b", "shape": "train_4k",
+        "steps": [
+            ("baseline", {}, {}, {}),
+            ("causal-skip+bf16-attn",
+             {"causal_skip": True, "attn_compute_dtype": "bfloat16"},
+             {}, {}),
+            ("bf16-params", {}, {"cast_params": True}, {}),
+            ("colrow-psum", {"tp_psum": True}, {}, {}),
+            ("compress-grads", {}, {"compress_grads": True}, {}),
+        ],
+    },
+    # Cell 3: worst roofline fraction — serving decode (the paper's
+    # matrix-vector hot loop at LLM scale).
+    "qwen-decode": {
+        "arch": "qwen2.5-14b", "shape": "decode_32k",
+        "steps": [
+            ("baseline", {}, {}, {}),
+            ("scatter-cache", {"cache_update": "scatter"}, {}, {}),
+            ("bf16-attn", {"attn_compute_dtype": "bfloat16"}, {}, {}),
+            ("bf16-params", {"param_dtype": "bfloat16"}, {}, {}),
+            ("tp-resident-params", {}, {}, {"fsdp": None}),
+            ("tp-psum", {"tp_psum": True}, {}, {}),
+        ],
+    },
+    # gemma3 local-attention prefill: causal+window skip pays double.
+    "gemma3-prefill": {
+        "arch": "gemma3-27b", "shape": "prefill_32k",
+        "steps": [
+            ("baseline", {}, {}, {}),
+            ("causal-skip", {"causal_skip": True}, {}, {}),
+            ("bf16-attn", {"attn_compute_dtype": "bfloat16"}, {}, {}),
+            ("tp-resident-params", {"param_dtype": "bfloat16"}, {},
+             {"fsdp": None}),
+        ],
+    },
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=list(SERIES))
+    ap.add_argument("--out", default="benchmarks/artifacts/perf")
+    args = ap.parse_args()
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch import cells
+    from repro.launch.mesh import make_production_mesh
+    from repro.training import TrainConfig
+
+    series = SERIES[args.cell]
+    mesh = make_production_mesh()
+    shape = SHAPES[series["shape"]]
+
+    cfg_over, tc_over, rules_over = {}, {}, {}
+    results = []
+    for name, c_o, t_o, r_o in series["steps"]:
+        cfg_over.update(c_o)
+        tc_over.update(t_o)
+        rules_over.update(r_o)
+        cfg = dataclasses.replace(get_config(series["arch"]), **cfg_over)
+        tc = TrainConfig(**{"microbatches": 8, **tc_over})
+        t0 = time.time()
+        low = cells.lower_cell(cfg, shape, mesh, tc,
+                               rules=rules_over or None)
+        comp = low.compile()
+        rec = cells.analyze(low, comp, cfg, shape, mesh)
+        rec["variant"] = name
+        rec["wall_s"] = round(time.time() - t0, 1)
+        results.append(rec)
+        t = rec["memory_analysis"].get("temp_size_in_bytes", 0) / 2 ** 30
+        print(f"[{args.cell}] {name:<22} compute={rec['compute_s']:.4f} "
+              f"mem={rec['memory_s']:.4f} coll={rec['collective_s']:.4f} "
+              f"bneck={rec['bottleneck']:<10} rf={rec['roofline_fraction']:.4f} "
+              f"temp={t:.1f}GiB", flush=True)
+
+    os.makedirs(args.out, exist_ok=True)
+    with open(os.path.join(args.out, f"{args.cell}.json"), "w") as f:
+        json.dump(results, f, indent=1, default=str)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,71 @@
+"""Precision of the fast activations (paper §3.4) and of the whole
+compiled pipeline vs the SimpleNN oracle — the paper's "approximating
+activation functions … impacts the precision" quantified."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core import CompiledModel, SimpleNN
+from repro.kernels.fast_act import ref as fa
+
+from .table1_models import SUITE
+
+
+def activation_errors() -> Dict[str, Dict[str, float]]:
+    x = np.linspace(-8, 8, 100_001, dtype=np.float32)
+    out = {}
+    for fn in ("exp", "tanh", "sigmoid"):
+        approx = np.asarray(fa.FAST[fn](x))
+        exact = np.asarray(fa.EXACT[fn](x))
+        denom = np.maximum(np.abs(exact), 1e-6)
+        out[fn] = {
+            "max_abs": float(np.max(np.abs(approx - exact))),
+            "max_rel": float(np.max(np.abs(approx - exact) / denom)),
+        }
+    # softmax over a batch of logit-ish rows
+    rng = np.random.default_rng(0)
+    z = rng.standard_normal((256, 64)).astype(np.float32) * 4
+    a = np.asarray(fa.fast_softmax(z))
+    e = np.asarray(fa.EXACT["softmax"](z, axis=-1))
+    out["softmax"] = {"max_abs": float(np.max(np.abs(a - e))),
+                      "max_rel": float("nan")}
+    return out
+
+
+def end_to_end_errors() -> Dict[str, Dict[str, float]]:
+    rng = np.random.default_rng(1)
+    out = {}
+    for name in ("C-HTWK", "C-BH", "Segmenter"):
+        g = SUITE[name]()
+        in_name = next(iter(g.inputs))
+        x = rng.standard_normal((2,) + g.inputs[in_name].shape) \
+            .astype(np.float32)
+        want = np.asarray(list(SimpleNN(g)(**{in_name: x}).values())[0])
+        exact = np.asarray(list(
+            CompiledModel(g).apply(**{in_name: x}).values())[0])
+        fast = np.asarray(list(
+            CompiledModel(g, precision="fast").apply(
+                **{in_name: x}).values())[0])
+        out[name] = {
+            "exact_vs_oracle": float(np.max(np.abs(want - exact))),
+            "fast_vs_oracle": float(np.max(np.abs(want - fast))),
+        }
+    return out
+
+
+def main() -> None:
+    print("fast-activation errors (paper §3.4):")
+    for fn, e in activation_errors().items():
+        print(f"  {fn:<8} max_abs={e['max_abs']:.3e} "
+              f"max_rel={e['max_rel']:.3e}")
+    print("end-to-end compiled vs SimpleNN oracle:")
+    for name, e in end_to_end_errors().items():
+        print(f"  {name:<10} exact={e['exact_vs_oracle']:.2e} "
+              f"fast={e['fast_vs_oracle']:.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Roofline table from the dry-run artifacts (§Roofline).
+
+Reads benchmarks/artifacts/dryrun/*.json (written by
+``repro.launch.dryrun``) and prints the three-term roofline per
+(arch × shape × mesh): compute / memory / collective seconds, the
+dominant term, MODEL_FLOPS/HLO_FLOPs, and the roofline fraction."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load(mesh_kind: str = None) -> List[Dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if mesh_kind and rec.get("mesh_kind") != mesh_kind:
+            continue
+        rows.append(rec)
+    return rows
+
+
+def fmt_row(r: Dict) -> str:
+    if r.get("status") == "skipped":
+        return (f"{r['arch']:<18} {r['shape']:<12} "
+                f"SKIPPED ({r['reason'][:48]})")
+    return (f"{r['arch']:<18} {r['shape']:<12} "
+            f"{r['compute_s']:>9.3f} {r['memory_s']:>9.3f} "
+            f"{r['collective_s']:>9.3f}  {r['bottleneck']:<10} "
+            f"{r['useful_flops_ratio']:>6.2f} "
+            f"{r['roofline_fraction']:>7.4f}")
+
+
+def main() -> None:
+    for kind in ("single", "multi"):
+        rows = load(kind)
+        if not rows:
+            continue
+        print(f"\n=== mesh: {kind} "
+              f"({'16×16=256' if kind == 'single' else '2×16×16=512'} "
+              f"chips) ===")
+        hdr = (f"{'arch':<18} {'shape':<12} {'compute_s':>9} "
+               f"{'memory_s':>9} {'coll_s':>9}  {'bottleneck':<10} "
+               f"{'useful':>6} {'rf':>7}")
+        print(hdr)
+        print("-" * len(hdr))
+        for r in rows:
+            print(fmt_row(r))
+
+
+if __name__ == "__main__":
+    main()

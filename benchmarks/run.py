@@ -1,0 +1,35 @@
+"""Benchmark aggregator: one section per paper table/figure plus the
+roofline report.  ``PYTHONPATH=src python -m benchmarks.run``"""
+
+from __future__ import annotations
+
+
+def main() -> None:
+    from . import ablations, precision, roofline, table1
+
+    print("=" * 72)
+    print("Table 1 — compiled vs interpreted inference + compile time")
+    print("=" * 72)
+    table1.main()
+
+    print()
+    print("=" * 72)
+    print("§3.4 — fast-activation / end-to-end precision")
+    print("=" * 72)
+    precision.main()
+
+    print()
+    print("=" * 72)
+    print("§3 — pass ablations")
+    print("=" * 72)
+    ablations.main()
+
+    print()
+    print("=" * 72)
+    print("§Roofline — dry-run derived terms (see EXPERIMENTS.md)")
+    print("=" * 72)
+    roofline.main()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Table 1: compiled vs interpreted inference time + compile time.
+
+The paper's interpreters (frugally-deep, RoboDNN, TF-Lite, tiny-dnn)
+walk the network structure on every call; our interpreted baseline is
+``SimpleNN`` stepped op-by-op from Python (each jnp op dispatched
+eagerly), and the compiled row is ``CompiledModel`` — one specialized
+XLA program with every pass applied.  The last row reproduces the
+paper's "Compilation Time".
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+import jax
+
+from repro.core import CompiledModel, SimpleNN
+
+from .table1_models import SUITE
+
+
+def _time_call(fn, *args, reps=20, warmup=3) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run(reps: int = 20) -> Dict[str, Dict[str, float]]:
+    rng = np.random.default_rng(0)
+    rows: Dict[str, Dict[str, float]] = {}
+    for name, build in SUITE.items():
+        g = build()
+        in_name = next(iter(g.inputs))
+        shape = (1,) + g.inputs[in_name].shape
+        x = rng.standard_normal(shape).astype(np.float32)
+
+        simple = SimpleNN(g)
+        t_simple = _time_call(
+            lambda x=x: list(simple(**{in_name: x}).values())[0],
+            reps=max(3, reps // 4))
+
+        cm = CompiledModel(g)
+        fn = cm.compile(batch_size=1)
+        t_compiled = _time_call(lambda x=x: list(fn(x).values())[0],
+                                reps=reps)
+
+        # numerics vs oracle (the paper's SimpleNN role)
+        want = np.asarray(list(simple(**{in_name: x}).values())[0])
+        got = np.asarray(list(fn(x).values())[0])
+        err = float(np.max(np.abs(want - got)))
+
+        rows[name] = {
+            "interpreted_ms": t_simple * 1e3,
+            "compiled_ms": t_compiled * 1e3,
+            "speedup": t_simple / t_compiled,
+            "compile_time_ms": (cm.compile_time or 0) * 1e3,
+            "max_abs_err": err,
+        }
+    return rows
+
+
+def main() -> None:
+    rows = run()
+    hdr = f"{'model':<12} {'interp ms':>10} {'compiled ms':>12} " \
+          f"{'speedup':>8} {'compile ms':>11} {'max err':>9}"
+    print(hdr)
+    print("-" * len(hdr))
+    for name, r in rows.items():
+        print(f"{name:<12} {r['interpreted_ms']:>10.3f} "
+              f"{r['compiled_ms']:>12.3f} {r['speedup']:>8.1f} "
+              f"{r['compile_time_ms']:>11.1f} {r['max_abs_err']:>9.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .checkpointer import Checkpointer, install_sigterm_hook

@@ -1,0 +1,21 @@
+"""repro.core — the paper's contribution: a model-load-time compiler.
+
+Public API:
+    Graph, ModelBuilder         — build/load models (front end, §3.1)
+    CompiledModel               — optimize + JIT-compile (§3.2–3.5)
+    SimpleNN                    — exact oracle interpreter (§3.1)
+    run_pipeline                — the pass pipeline, standalone
+"""
+
+from .graph import Graph, Node, TensorSpec
+from .keras_like import ModelBuilder, load_model, save_model
+from .compiler import CompiledModel
+from .simple import SimpleNN
+from .passes import run_pipeline, DEFAULT_PIPELINE
+
+__all__ = [
+    "Graph", "Node", "TensorSpec",
+    "ModelBuilder", "load_model", "save_model",
+    "CompiledModel", "SimpleNN",
+    "run_pipeline", "DEFAULT_PIPELINE",
+]

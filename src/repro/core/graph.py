@@ -1,0 +1,370 @@
+"""Neural-network graph IR — the compiler's input.
+
+This is the JAX analogue of CompiledNN's internal representation: a
+static computational graph whose shapes (and, for inference, weights)
+are known at compile time.  Every optimization pass in
+``repro.core.passes`` consumes and produces this IR; the back end
+(``repro.core.compiler``) lowers it to a jitted JAX program, and the
+oracle (``repro.core.simple``) interprets it node by node.
+
+Design notes
+------------
+* Tensors are identified by string names; ``Graph.params`` maps names of
+  constant tensors (weights) to host numpy arrays.  Keeping weights as
+  named constants is what lets passes rewrite them (BN folding, layout
+  transformation) — the paper's "weights are compile-time constants so
+  their layout is free" (Eq. 3) is only expressible if weights live in
+  the IR.
+* Shapes use NHWC for image tensors (TPU-native layout; the paper used
+  HWC on x86 for the same streaming-friendliness reason).
+* The IR is deliberately small: exactly the ops needed for the paper's
+  Table-1 network suite plus generic elementwise/reduction ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def _conv_out_hw(h, w, kh, kw, sh, sw, padding):
+    """Output spatial dims for 'same'/'valid'/explicit ((t,b),(l,r)) padding."""
+    if padding == "same":
+        return -(-h // sh), -(-w // sw)
+    if padding == "valid":
+        return (h - kh) // sh + 1, (w - kw) // sw + 1
+    (t, b), (l, r) = padding
+    return (h + t + b - kh) // sh + 1, (w + l + r - kw) // sw + 1
+
+
+# Ops understood by the IR.  Each entry: op name -> required attrs.
+OPS: Dict[str, Tuple[str, ...]] = {
+    "input": (),
+    "constant": (),
+    "conv2d": ("strides", "padding"),          # weights: (kh, kw, cin, cout)
+    "depthwise_conv2d": ("strides", "padding"),  # weights: (kh, kw, c, mult)
+    "dense": (),                                # weights: (cin, cout)
+    "batchnorm": ("epsilon",),                  # params: gamma, beta, mean, var
+    "activation": ("fn",),                      # fn in ACTIVATIONS
+    "maxpool2d": ("pool_size", "strides", "padding"),
+    "avgpool2d": ("pool_size", "strides", "padding"),
+    "global_avg_pool": (),
+    "upsample2d": ("factor",),                  # nearest-neighbour
+    "zero_pad2d": ("padding",),                 # ((t,b),(l,r))
+    "add": (),
+    "mul": (),
+    "concat": ("axis",),
+    "reshape": ("shape",),
+    "flatten": (),
+    "softmax": ("axis",),
+}
+
+#: Activation functions the compiler understands.  ``fusable`` means the
+#: back end may apply them as an epilogue of a producing matmul/conv
+#: (paper §3.4: applied in registers before the store).
+ACTIVATIONS = {
+    "linear": True,
+    "relu": True,
+    "relu6": True,
+    "leaky_relu": True,
+    "sigmoid": True,   # via tanh identity, Eq. 4
+    "tanh": True,
+    "elu": True,
+    "hard_sigmoid": True,
+    "softmax": False,  # two-pass, never fusable (paper §3.4)
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class TensorSpec:
+    """Shape+dtype of an IR tensor (batch dim excluded; the compiler
+    specializes on the batch size separately, like the paper specializes
+    on the input shape)."""
+
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+    @property
+    def nbytes(self) -> int:
+        return self.size * np.dtype(self.dtype).itemsize
+
+
+@dataclasses.dataclass
+class Node:
+    """One IR node.  ``params`` holds names of weight tensors in
+    ``Graph.params``; ``attrs`` holds static attributes.
+
+    ``epilogue`` is filled in by the activation-fusion pass: the name of
+    an activation to apply to this node's output inside the producing
+    kernel (the paper's "before writing the result into memory").
+    """
+
+    op: str
+    name: str
+    inputs: List[str]
+    output: str
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    params: Dict[str, str] = dataclasses.field(default_factory=dict)
+    epilogue: Optional[str] = None
+    epilogue_attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def validate(self) -> None:
+        if self.op not in OPS:
+            raise ValueError(f"unknown op {self.op!r} in node {self.name!r}")
+        for attr in OPS[self.op]:
+            if attr not in self.attrs:
+                raise ValueError(
+                    f"node {self.name!r} (op {self.op}) missing attr {attr!r}"
+                )
+
+
+class Graph:
+    """A static NN graph: nodes in insertion order + named weights.
+
+    The graph is SSA-like: every tensor name is produced by exactly one
+    node (or is a graph input); nodes may consume any previously
+    produced tensor.
+    """
+
+    def __init__(self) -> None:
+        self.nodes: List[Node] = []
+        self.inputs: Dict[str, TensorSpec] = {}
+        self.outputs: List[str] = []
+        self.params: Dict[str, np.ndarray] = {}
+        self._producers: Dict[str, Node] = {}
+
+    # -- construction -------------------------------------------------
+    def add_input(self, name: str, shape: Sequence[int], dtype: str = "float32") -> str:
+        if name in self.inputs or name in self._producers:
+            raise ValueError(f"duplicate tensor name {name!r}")
+        self.inputs[name] = TensorSpec(tuple(shape), dtype)
+        return name
+
+    def add_param(self, name: str, value: np.ndarray) -> str:
+        if name in self.params:
+            raise ValueError(f"duplicate param name {name!r}")
+        self.params[name] = np.asarray(value, dtype=np.float32)
+        return name
+
+    def add_node(
+        self,
+        op: str,
+        name: str,
+        inputs: Sequence[str],
+        output: Optional[str] = None,
+        attrs: Optional[Dict[str, Any]] = None,
+        params: Optional[Dict[str, str]] = None,
+    ) -> str:
+        output = output or f"{name}:out"
+        if output in self._producers or output in self.inputs:
+            raise ValueError(f"duplicate tensor name {output!r}")
+        for t in inputs:
+            if t not in self._producers and t not in self.inputs:
+                raise ValueError(f"node {name!r} consumes unknown tensor {t!r}")
+        node = Node(
+            op=op,
+            name=name,
+            inputs=list(inputs),
+            output=output,
+            attrs=dict(attrs or {}),
+            params=dict(params or {}),
+        )
+        node.validate()
+        for p in node.params.values():
+            if p not in self.params:
+                raise ValueError(f"node {name!r} references unknown param {p!r}")
+        self.nodes.append(node)
+        self._producers[output] = node
+        return output
+
+    def set_outputs(self, names: Sequence[str]) -> None:
+        for n in names:
+            if n not in self._producers and n not in self.inputs:
+                raise ValueError(f"unknown output tensor {n!r}")
+        self.outputs = list(names)
+
+    # -- queries ------------------------------------------------------
+    def producer(self, tensor: str) -> Optional[Node]:
+        return self._producers.get(tensor)
+
+    def consumers(self, tensor: str) -> List[Node]:
+        return [n for n in self.nodes if tensor in n.inputs]
+
+    def rebuild_index(self) -> None:
+        """Recompute the producer index after passes mutate ``nodes``."""
+        self._producers = {n.output: n for n in self.nodes}
+
+    def toposort(self) -> List[Node]:
+        """Nodes are appended in topological order by construction, but
+        passes may reorder; verify and return a valid order."""
+        available = set(self.inputs)
+        order: List[Node] = []
+        pending = list(self.nodes)
+        while pending:
+            progressed = False
+            rest: List[Node] = []
+            for node in pending:
+                if all(t in available for t in node.inputs):
+                    order.append(node)
+                    available.add(node.output)
+                    progressed = True
+                else:
+                    rest.append(node)
+            if not progressed:
+                names = [n.name for n in rest]
+                raise ValueError(f"graph has a cycle or dangling inputs: {names}")
+            pending = rest
+        return order
+
+    # -- shape inference ---------------------------------------------
+    def infer_shapes(self) -> Dict[str, TensorSpec]:
+        """Static shape inference over the whole graph.
+
+        This is the compile-time knowledge the paper exploits: every
+        intermediate tensor's shape is known before any code runs.
+        """
+        specs: Dict[str, TensorSpec] = dict(self.inputs)
+        for node in self.toposort():
+            specs[node.output] = self._infer_node(node, specs)
+        return specs
+
+    def _infer_node(self, node: Node, specs: Dict[str, TensorSpec]) -> TensorSpec:
+        op = node.op
+        ins = [specs[t] for t in node.inputs]
+        if op == "constant":
+            return TensorSpec(tuple(self.params[node.params["value"]].shape))
+        if op == "conv2d":
+            h, w, _ = ins[0].shape
+            kh, kw, _, cout = self.params[node.params["kernel"]].shape
+            sh, sw = node.attrs["strides"]
+            oh, ow = _conv_out_hw(h, w, kh, kw, sh, sw, node.attrs["padding"])
+            return TensorSpec((oh, ow, cout))
+        if op == "depthwise_conv2d":
+            h, w, c = ins[0].shape
+            kh, kw, _, mult = self.params[node.params["kernel"]].shape
+            sh, sw = node.attrs["strides"]
+            oh, ow = _conv_out_hw(h, w, kh, kw, sh, sw, node.attrs["padding"])
+            return TensorSpec((oh, ow, c * mult))
+        if op == "dense":
+            kshape = self.params[node.params["kernel"]].shape
+            if node.attrs.get("kernel_layout") == "oi":
+                cout, cin = kshape
+            else:
+                cin, cout = kshape
+            # The layout pass may have padded cout; the logical width is
+            # the original (the back end slices the padding off).
+            cout = node.attrs.get("orig_cout", cout)
+            if ins[0].shape[-1] != cin:
+                raise ValueError(
+                    f"dense {node.name!r}: input {ins[0].shape} vs kernel cin {cin}"
+                )
+            return TensorSpec(ins[0].shape[:-1] + (cout,))
+        if op in ("batchnorm", "activation"):
+            return ins[0]
+        if op in ("maxpool2d", "avgpool2d"):
+            h, w, c = ins[0].shape
+            ph, pw = node.attrs["pool_size"]
+            sh, sw = node.attrs["strides"]
+            if node.attrs["padding"] == "same":
+                oh, ow = -(-h // sh), -(-w // sw)
+            else:
+                oh, ow = (h - ph) // sh + 1, (w - pw) // sw + 1
+            return TensorSpec((oh, ow, c))
+        if op == "global_avg_pool":
+            return TensorSpec((ins[0].shape[-1],))
+        if op == "upsample2d":
+            h, w, c = ins[0].shape
+            f = node.attrs["factor"]
+            return TensorSpec((h * f, w * f, c))
+        if op == "zero_pad2d":
+            (t, b), (l, r) = node.attrs["padding"]
+            h, w, c = ins[0].shape
+            return TensorSpec((h + t + b, w + l + r, c))
+        if op in ("add", "mul"):
+            if ins[0].shape != ins[1].shape:
+                raise ValueError(f"{op} {node.name!r}: shape mismatch {ins}")
+            return ins[0]
+        if op == "concat":
+            ax = node.attrs["axis"]
+            shape = list(ins[0].shape)
+            shape[ax] = sum(s.shape[ax] for s in ins)
+            return TensorSpec(tuple(shape))
+        if op == "reshape":
+            return TensorSpec(tuple(node.attrs["shape"]))
+        if op == "flatten":
+            return TensorSpec((ins[0].size,))
+        if op == "softmax":
+            return ins[0]
+        raise NotImplementedError(op)
+
+    # -- hashing (compile-cache key) ----------------------------------
+    def structure_hash(self) -> str:
+        """Hash of the graph structure + shapes (not weight values).
+
+        Used as the compile-cache key: two models with identical
+        architecture share a compiled program when weights are passed as
+        arguments (framework mode); in embed_weights mode the weight
+        hash is mixed in by the compiler.
+        """
+        payload = {
+            "inputs": {k: (v.shape, v.dtype) for k, v in self.inputs.items()},
+            "outputs": self.outputs,
+            "nodes": [
+                (
+                    n.op,
+                    n.name,
+                    tuple(n.inputs),
+                    n.output,
+                    json.dumps(n.attrs, sort_keys=True, default=str),
+                    tuple(sorted(n.params.items())),
+                    n.epilogue,
+                    json.dumps(n.epilogue_attrs, sort_keys=True, default=str),
+                )
+                for n in self.nodes
+            ],
+            "param_shapes": {k: v.shape for k, v in sorted(self.params.items())},
+        }
+        blob = json.dumps(payload, sort_keys=True, default=str).encode()
+        return hashlib.sha256(blob).hexdigest()
+
+    def copy(self) -> "Graph":
+        g = Graph()
+        g.inputs = dict(self.inputs)
+        g.outputs = list(self.outputs)
+        g.params = {k: v.copy() for k, v in self.params.items()}
+        g.nodes = [
+            Node(
+                op=n.op,
+                name=n.name,
+                inputs=list(n.inputs),
+                output=n.output,
+                attrs=dict(n.attrs),
+                params=dict(n.params),
+                epilogue=n.epilogue,
+                epilogue_attrs=dict(n.epilogue_attrs),
+            )
+            for n in self.nodes
+        ]
+        g.rebuild_index()
+        return g
+
+    def summary(self) -> str:
+        specs = self.infer_shapes()
+        lines = [f"Graph: {len(self.nodes)} nodes, {len(self.params)} params"]
+        for node in self.nodes:
+            epi = f" +{node.epilogue}" if node.epilogue else ""
+            lines.append(
+                f"  {node.name:<24} {node.op:<18}{epi:<12} -> {specs[node.output].shape}"
+            )
+        return "\n".join(lines)

@@ -1,0 +1,87 @@
+"""Compiler passes over the graph IR.
+
+Pipeline order mirrors the paper's intermediate processing (§3.2/§3.5):
+
+1. canonicalize      — normalize ops (flatten→reshape, lone softmax→activation)
+2. fold_constants    — precompute weight-only subgraphs
+3. fuse_pad          — merge zero_pad2d into the following conv (fewer passes)
+4. fuse_activation   — activations become epilogues of producers (§3.4)
+5. fold_batchnorm    — BN folded into adjacent conv/dense (§3.5); runs after
+                       activation fusion so the conv→act→BN pattern can fold
+                       as a post-activation affine epilogue, as the paper does
+6. optimize_layout   — compile-time weight re-layout (Eq. 3 analogue) (§3.3)
+7. plan_memory       — lifetime analysis + arena assignment, in-place reuse (§3.2)
+
+Each pass is a pure function Graph -> Graph (plus optional report).
+``run_pipeline`` applies them and returns (graph, report dict).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+from ..graph import Graph
+from .canonicalize import canonicalize
+from .fold_constants import fold_constants
+from .fold_batchnorm import fold_batchnorm
+from .fuse_pad import fuse_pad
+from .fuse_activation import fuse_activation
+from .memory_plan import MemoryPlan, plan_memory
+from .layout import optimize_layout
+
+# fuse_activation runs twice: once so the conv→act→BN pattern folds as a
+# post-activation affine (paper §3.5), and once more because BN removal
+# exposes new conv→act adjacencies (conv→BN→act becomes conv→act).
+DEFAULT_PIPELINE = (
+    "canonicalize",
+    "fold_constants",
+    "fuse_pad",
+    "fuse_activation",
+    "fold_batchnorm",
+    "fuse_activation",
+    "optimize_layout",
+)
+
+_PASSES = {
+    "canonicalize": canonicalize,
+    "fold_constants": fold_constants,
+    "fuse_pad": fuse_pad,
+    "fold_batchnorm": fold_batchnorm,
+    "fuse_activation": fuse_activation,
+    "optimize_layout": optimize_layout,
+}
+
+
+def run_pipeline(
+    graph: Graph,
+    passes: Optional[Tuple[str, ...]] = None,
+) -> Tuple[Graph, Dict]:
+    """Run the pass pipeline; returns the optimized graph and a report
+    with per-pass statistics plus the memory plan."""
+    report: Dict = {"passes": []}
+    g = graph.copy()
+    for name in passes if passes is not None else DEFAULT_PIPELINE:
+        before = len(g.nodes)
+        g, stats = _PASSES[name](g)
+        g.rebuild_index()
+        report["passes"].append(
+            {"pass": name, "nodes_before": before, "nodes_after": len(g.nodes), **stats}
+        )
+    plan = plan_memory(g)
+    report["memory_plan"] = plan.stats()
+    report["plan"] = plan
+    return g, report
+
+
+__all__ = [
+    "run_pipeline",
+    "DEFAULT_PIPELINE",
+    "canonicalize",
+    "fold_constants",
+    "fold_batchnorm",
+    "fuse_pad",
+    "fuse_activation",
+    "plan_memory",
+    "MemoryPlan",
+    "optimize_layout",
+]

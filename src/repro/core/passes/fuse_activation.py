@@ -1,0 +1,53 @@
+"""Activation fusion (paper §3.4).
+
+Elementwise activations following a conv/dense node are removed from the
+graph and recorded as the producer's ``epilogue``: the back end applies
+them to the accumulator tile before the store to memory ("the activation
+function is applied before writing the result of the operation into
+memory. This avoids an additional loop with load and store operations").
+
+Softmax is never fused — it needs two passes (§3.4) and always stays a
+separate compilation unit.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from ..graph import ACTIVATIONS, Graph
+from .fold_batchnorm import _remove_node
+
+FUSABLE_PRODUCERS = ("conv2d", "depthwise_conv2d", "dense")
+
+
+def fuse_activation(graph: Graph) -> Tuple[Graph, Dict]:
+    g = graph.copy()
+    fused = 0
+    changed = True
+    while changed:
+        changed = False
+        for act in list(g.nodes):
+            if act.op != "activation":
+                continue
+            fn = act.attrs["fn"]
+            if not ACTIVATIONS.get(fn, False):
+                continue  # not fusable (softmax)
+            src = g.producer(act.inputs[0])
+            if src is None or src.op not in FUSABLE_PRODUCERS:
+                continue
+            if src.epilogue not in (None, "linear"):
+                continue  # already has a fused activation
+            if len(g.consumers(src.output)) != 1:
+                # The pre-activation value is needed elsewhere; fusing
+                # would force recomputation.  CompiledNN only fuses when
+                # "deemed beneficial" — skip.
+                continue
+            src.epilogue = fn
+            src.epilogue_attrs = {
+                k: v for k, v in act.attrs.items() if k != "fn"
+            }
+            _remove_node(g, act)
+            fused += 1
+            changed = True
+    g.rebuild_index()
+    return g, {"fused_activations": fused}

@@ -1,0 +1,190 @@
+"""SimpleNN — the straightforward oracle interpreter.
+
+The paper ships ``SimpleNN``, "a straightforward, but slow
+implementation of neural network inference … written to be as exact in
+its calculations as possible, [so] it can be used to benchmark the
+compiler in terms of numeric precision" (§3.1).  This is that class:
+it walks the *unoptimized* graph node by node with plain ``jnp`` ops,
+no fusion, no folding, no approximations.  Every compiler pass and the
+whole compiled program are validated against it.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph, Node
+
+
+def _lax_padding(padding):
+    """'same'/'valid' -> lax string form; explicit ((t,b),(l,r)) -> pairs."""
+    if isinstance(padding, str):
+        return padding.upper()
+    (t, b), (l, r) = padding
+    return [(t, b), (l, r)]
+
+
+def _activation(fn: str, x: jnp.ndarray, attrs: Dict) -> jnp.ndarray:
+    if fn == "linear":
+        return x
+    if fn == "relu":
+        return jnp.maximum(x, 0.0)
+    if fn == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if fn == "leaky_relu":
+        alpha = attrs.get("alpha", 0.01)
+        return jnp.where(x >= 0, x, alpha * x)
+    if fn == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if fn == "tanh":
+        return jnp.tanh(x)
+    if fn == "elu":
+        return jnp.where(x >= 0, x, jnp.expm1(x))
+    if fn == "hard_sigmoid":
+        return jnp.clip(x * 0.2 + 0.5, 0.0, 1.0)
+    if fn == "softmax":
+        return jax.nn.softmax(x, axis=attrs.get("axis", -1))
+    raise NotImplementedError(fn)
+
+
+class SimpleNN:
+    """Node-by-node interpreter of a :class:`~repro.core.graph.Graph`.
+
+    Inputs/outputs carry an explicit leading batch dimension.  All image
+    tensors are NHWC.
+    """
+
+    def __init__(self, graph: Graph):
+        self.graph = graph
+        self.specs = graph.infer_shapes()
+
+    def __call__(self, **inputs: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        env: Dict[str, jnp.ndarray] = {}
+        for name, spec in self.graph.inputs.items():
+            if name not in inputs:
+                raise ValueError(f"missing input {name!r}")
+            x = jnp.asarray(inputs[name])
+            if x.shape[1:] != spec.shape:
+                raise ValueError(
+                    f"input {name!r}: expected (batch,)+{spec.shape}, got {x.shape}"
+                )
+            env[name] = x
+        for node in self.graph.toposort():
+            env[node.output] = self._eval(node, env)
+            # SimpleNN never fuses: if a pass attached an epilogue we
+            # still apply it, but as a separate elementwise step.
+            if node.epilogue and node.epilogue != "linear":
+                env[node.output] = _activation(
+                    node.epilogue, env[node.output], node.epilogue_attrs
+                )
+        return {name: env[name] for name in self.graph.outputs}
+
+    # ------------------------------------------------------------------
+    def _eval(self, node: Node, env: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+        g = self.graph
+        op = node.op
+        ins = [env[t] for t in node.inputs]
+        if op == "constant":
+            # Broadcast the constant over the batch dimension.
+            batch = next(iter(env.values())).shape[0] if env else 1
+            v = jnp.asarray(g.params[node.params["value"]])
+            return jnp.broadcast_to(v, (batch,) + v.shape)
+        if op == "conv2d":
+            k = jnp.asarray(g.params[node.params["kernel"]])
+            y = jax.lax.conv_general_dilated(
+                ins[0],
+                k,
+                window_strides=node.attrs["strides"],
+                padding=_lax_padding(node.attrs["padding"]),
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            )
+            if "bias" in node.params:
+                y = y + jnp.asarray(g.params[node.params["bias"]])
+            return y
+        if op == "depthwise_conv2d":
+            k = jnp.asarray(g.params[node.params["kernel"]])  # (kh,kw,c,mult)
+            kh, kw, c, mult = k.shape
+            y = jax.lax.conv_general_dilated(
+                ins[0],
+                k.reshape(kh, kw, 1, c * mult),
+                window_strides=node.attrs["strides"],
+                padding=_lax_padding(node.attrs["padding"]),
+                dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                feature_group_count=c,
+            )
+            if "bias" in node.params:
+                y = y + jnp.asarray(g.params[node.params["bias"]])
+            return y
+        if op == "dense":
+            k = jnp.asarray(g.params[node.params["kernel"]])
+            y = ins[0] @ k
+            if "bias" in node.params:
+                y = y + jnp.asarray(g.params[node.params["bias"]])
+            return y
+        if op == "batchnorm":
+            gamma = jnp.asarray(g.params[node.params["gamma"]])
+            beta = jnp.asarray(g.params[node.params["beta"]])
+            mean = jnp.asarray(g.params[node.params["mean"]])
+            var = jnp.asarray(g.params[node.params["var"]])
+            eps = node.attrs["epsilon"]
+            # Deliberately the two-step textbook formula (the paper notes
+            # folding changes associativity; the oracle keeps it unfolded).
+            return gamma * (ins[0] - mean) / jnp.sqrt(var + eps) + beta
+        if op == "activation":
+            return _activation(node.attrs["fn"], ins[0], node.attrs)
+        if op == "maxpool2d":
+            return jax.lax.reduce_window(
+                ins[0],
+                -jnp.inf,
+                jax.lax.max,
+                (1,) + tuple(node.attrs["pool_size"]) + (1,),
+                (1,) + tuple(node.attrs["strides"]) + (1,),
+                node.attrs["padding"].upper(),
+            )
+        if op == "avgpool2d":
+            ones = jnp.ones_like(ins[0])
+            window = (1,) + tuple(node.attrs["pool_size"]) + (1,)
+            strides = (1,) + tuple(node.attrs["strides"]) + (1,)
+            pad = node.attrs["padding"].upper()
+            s = jax.lax.reduce_window(ins[0], 0.0, jax.lax.add, window, strides, pad)
+            n = jax.lax.reduce_window(ones, 0.0, jax.lax.add, window, strides, pad)
+            return s / n
+        if op == "global_avg_pool":
+            return jnp.mean(ins[0], axis=(1, 2))
+        if op == "upsample2d":
+            f = node.attrs["factor"]
+            return jnp.repeat(jnp.repeat(ins[0], f, axis=1), f, axis=2)
+        if op == "zero_pad2d":
+            (t, b), (l, r) = node.attrs["padding"]
+            return jnp.pad(ins[0], ((0, 0), (t, b), (l, r), (0, 0)))
+        if op == "add":
+            return ins[0] + ins[1]
+        if op == "mul":
+            return ins[0] * ins[1]
+        if op == "concat":
+            # attrs axis excludes batch; +1 for the runtime batch dim.
+            return jnp.concatenate(ins, axis=node.attrs["axis"] + 1)
+        if op == "reshape":
+            return ins[0].reshape((ins[0].shape[0],) + tuple(node.attrs["shape"]))
+        if op == "flatten":
+            return ins[0].reshape(ins[0].shape[0], -1)
+        if op == "softmax":
+            return jax.nn.softmax(ins[0], axis=node.attrs["axis"])
+        raise NotImplementedError(op)
+
+
+def random_params_like(graph: Graph, seed: int = 0) -> None:
+    """Fill ``graph.params`` in place with deterministic random values —
+    used by tests/benchmarks that build architecture-only graphs."""
+    rng = np.random.default_rng(seed)
+    for name, value in graph.params.items():
+        if name.endswith(("var",)) or "var" in name.split("/")[-1]:
+            graph.params[name] = rng.uniform(0.5, 2.0, value.shape).astype(np.float32)
+        else:
+            graph.params[name] = (rng.standard_normal(value.shape) * 0.1).astype(
+                np.float32
+            )

@@ -1,0 +1,2 @@
+from . import sharding
+from .fault import StragglerWatchdog, run_with_restarts

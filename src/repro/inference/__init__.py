@@ -1,0 +1,2 @@
+from .engine import Engine, Request, Completion
+from .fold_norms import fold_norms

@@ -1,0 +1,167 @@
+"""Batched serving engine: prefill/decode with slot-level continuous
+batching.
+
+The compile-then-serve flow mirrors the paper's ``CompiledNN``: the
+engine owns the cache memory layout (the paper: "input and output
+tensors are owned by CompiledNN because it needs control over the
+actual memory layout"), compiles `prefill` and `decode_step` once per
+shape, and after that serving never interprets model structure.
+
+Design:
+* B fixed decode slots; each holds one request's KV/state cache rows.
+* New requests are prefilled one at a time (exact prompt length —
+  runtime specialization; repeated lengths hit jit's trace cache) and
+  their cache is spliced into a free slot.
+* One batched decode step advances every active slot; finished slots
+  (EOS / max_tokens) are refilled from the queue — continuous batching
+  at slot granularity.
+* The decode step donates the cache buffers (`donate_argnums`), the
+  framework-scale version of the paper's in-place memory planning.
+* ``fold_norms`` runs at engine construction (compile-time weight
+  rewriting, paper §3.5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.api import Model
+from .fold_norms import fold_norms
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (s,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1              # -1 = never
+    temperature: float = 0.0      # 0 = greedy
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]
+
+
+class Engine:
+    def __init__(self, model: Model, params, *, slots: int = 4,
+                 max_len: int = 256, fold: bool = True, seed: int = 0):
+        self.model = model
+        self.cfg = model.cfg
+        if fold:
+            params, self.fold_report = fold_norms(self.cfg, params)
+        else:
+            self.fold_report = {"folds": 0}
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = model.init_cache(slots, max_len)
+        self.key = jax.random.PRNGKey(seed)
+
+        # slot bookkeeping (host side)
+        self.active = [False] * slots
+        self.remaining = [0] * slots
+        self.eos = [-1] * slots
+        self.temp = [0.0] * slots
+        self.uid = [-1] * slots
+        self.generated: Dict[int, List[int]] = {}
+        self.queue: List[Request] = []
+        self.done: List[Completion] = []
+        self.last_token = np.zeros((slots, 1), np.int32)
+
+        # compiled programs (donated cache: in-place buffer reuse)
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t),
+            donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, b, c: model.prefill(p, b, c))
+        self._splice = jax.jit(self._splice_impl, donate_argnums=(0,),
+                               static_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _splice_impl(cache, one_cache, slot: int):
+        """Copy the single-row cache `one_cache` into row `slot` of every
+        batch-indexed leaf.  Leaves are (L, B, ...) except pos (B,)."""
+        def put(dst, src):
+            if dst.ndim == 1:                      # pos (B,)
+                return dst.at[slot].set(src[0])
+            return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+        return jax.tree.map(put, cache, one_cache)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    # ------------------------------------------------------------------
+    def _fill_free_slots(self) -> None:
+        for s in range(self.slots):
+            if self.active[s] or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = np.asarray(req.prompt, np.int32)[None, :]
+            batch = {"tokens": jnp.asarray(prompt)}
+            if self.cfg.family == "audio":
+                batch["frames"] = jnp.zeros(
+                    (1, self.cfg.n_frames, self.cfg.d_model), jnp.float32)
+            if self.cfg.family == "vlm":
+                batch["patches"] = jnp.zeros(
+                    (1, self.cfg.num_image_tokens, self.cfg.vit_dim),
+                    jnp.float32)
+            one = self.model.init_cache(1, self.max_len)
+            logits, one = self._prefill(self.params, batch, one)
+            self.cache = self._splice(self.cache, one, s)
+            tok = self._sample(logits[:, -1], req.temperature)
+            self.last_token[s, 0] = int(tok[0])
+            self.active[s] = True
+            self.remaining[s] = req.max_new_tokens - 1
+            self.eos[s] = req.eos_id
+            self.temp[s] = req.temperature
+            self.uid[s] = req.uid
+            self.generated[req.uid] = [int(tok[0])]
+
+    def _sample(self, logits: jnp.ndarray, temperature: float) -> np.ndarray:
+        if temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(
+            jax.random.categorical(sub, logits / temperature, axis=-1),
+            np.int32)
+
+    def _retire(self, s: int) -> None:
+        self.done.append(Completion(self.uid[s], self.generated[self.uid[s]]))
+        self.active[s] = False
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: refill slots, one batched decode step.
+        Returns the number of active slots advanced."""
+        self._fill_free_slots()
+        if not any(self.active):
+            return 0
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self.last_token))
+        logits = logits[:, 0]
+        for s in range(self.slots):
+            if not self.active[s]:
+                continue
+            tok = int(self._sample(logits[s:s + 1], self.temp[s])[0])
+            self.generated[self.uid[s]].append(tok)
+            self.last_token[s, 0] = tok
+            self.remaining[s] -= 1
+            if self.remaining[s] <= 0 or tok == self.eos[s]:
+                self._retire(s)
+        return sum(self.active)
+
+    def run(self, max_steps: int = 10_000) -> List[Completion]:
+        """Drain the queue; returns completions in finish order."""
+        steps = 0
+        while (self.queue or any(self.active)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done

@@ -1,0 +1,100 @@
+"""Compile-time RMSNorm folding for the transformer zoo (paper §3.5).
+
+The paper folds batch-norm's affine into the adjacent conv/dense weights
+("adjusting the weights and biases … so that they already include the
+factors of the normalization").  The modern-transformer twin: RMSNorm's
+learned diagonal scale ``diag(1+γ)`` commutes into the *following*
+projection:
+
+    proj(rms(x) * (1+γ))  ==  rms(x) @ (diag(1+γ) W)
+
+so at model-load time we set γ' = 0 and W' = diag(1+γ)·W.  One
+multiplication per feature per layer disappears from every forward pass
+— exactly the paper's trade: arithmetic moved from run time to compile
+time because the weights are compile-time constants.  Inference-only
+(the fold would corrupt gradients w.r.t. the original parametrization).
+
+The fold leaves the *normalization* (rsqrt of the mean square) in place
+— only the diagonal scale moves.  Numerics change by float-associativity
+only; tests bound the drift against the unfolded oracle the same way the
+paper uses SimpleNN.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _scale_rows(w: jnp.ndarray, scale: jnp.ndarray, axis: int) -> jnp.ndarray:
+    """w scaled by `scale` along `axis` (the fan-in dim).  2-D scales are
+    (L, D) for layer-stacked weights (L on dim 0, D on `axis`)."""
+    shape = [1] * w.ndim
+    shape[axis] = w.shape[axis]
+    if scale.ndim == 2:
+        shape[0] = w.shape[0]
+    return (w.astype(jnp.float32)
+            * scale.reshape(shape).astype(jnp.float32)).astype(w.dtype)
+
+
+def _fold_layer(cfg, lp: Dict[str, Any]) -> Tuple[Dict[str, Any], int]:
+    """Fold ln1 into the attention input projections and ln2 into the
+    FFN input projections of one (stacked) layer pytree."""
+    lp = dict(lp)
+    folds = 0
+    s1 = 1.0 + lp["ln1"].astype(jnp.float32)          # (L, D)
+    s2 = 1.0 + lp["ln2"].astype(jnp.float32)
+
+    attn = dict(lp["attn"])
+    if cfg.mla:
+        for k in ("q_down", "kv_down"):
+            attn[k] = _scale_rows(attn[k], s1, 1)
+            folds += 1
+    else:
+        for k in ("wq", "wk", "wv"):
+            attn[k] = _scale_rows(attn[k], s1, 1)
+            folds += 1
+    lp["attn"] = attn
+    lp["ln1"] = jnp.zeros_like(lp["ln1"])
+
+    ffn = dict(lp["ffn"])
+    if cfg.n_experts:
+        ffn["router"] = _scale_rows(ffn["router"], s2, 1)
+        ffn["wi_gate"] = _scale_rows(ffn["wi_gate"], s2, 2)
+        ffn["wi_up"] = _scale_rows(ffn["wi_up"], s2, 2)
+        folds += 3
+        if cfg.n_shared:
+            sh = dict(ffn["shared"])
+            sh["wi_gate"] = _scale_rows(sh["wi_gate"], s2, 1)
+            sh["wi_up"] = _scale_rows(sh["wi_up"], s2, 1)
+            ffn["shared"] = sh
+            folds += 2
+    else:
+        ffn["wi_gate"] = _scale_rows(ffn["wi_gate"], s2, 1)
+        ffn["wi_up"] = _scale_rows(ffn["wi_up"], s2, 1)
+        folds += 2
+    lp["ffn"] = ffn
+    lp["ln2"] = jnp.zeros_like(lp["ln2"])
+    return lp, folds
+
+
+def fold_norms(cfg, params: Dict[str, Any]) -> Tuple[Dict[str, Any], Dict]:
+    """Inference-time norm fold for transformer-family params.
+    Returns (new_params, report).  No-op for families without RMSNorm
+    scales adjacent to projections (whisper's LayerNorm has a bias —
+    foldable in principle, left as-is; ssm/hybrid handled partially)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        return params, {"folds": 0, "note": f"family {cfg.family}: skipped"}
+    params = dict(params)
+    layers, folds = _fold_layer(cfg, params["layers"])
+    params["layers"] = layers
+    # Final norm -> unembedding (untied heads only: with tied embeddings
+    # the matrix is shared with the input lookup, which must stay raw).
+    if not cfg.tie_embeddings and "head" in params:
+        sf = 1.0 + params["ln_f"].astype(jnp.float32)
+        params["head"] = _scale_rows(params["head"], sf, 0)
+        params["ln_f"] = jnp.zeros_like(params["ln_f"])
+        folds += 1
+    return params, {"folds": folds}

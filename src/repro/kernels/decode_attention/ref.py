@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for single-token GQA decode attention."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..fast_act import ref as fast_ref
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,          # (B, H, D)
+    k_cache: jnp.ndarray,    # (B, S, Hkv, D)
+    v_cache: jnp.ndarray,    # (B, S, Hkv, D)
+    lengths: Optional[jnp.ndarray] = None,  # (B,) int32 valid-context lengths
+    *,
+    scale: Optional[float] = None,
+    fast: bool = False,
+) -> jnp.ndarray:
+    b, h, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    g = h // hkv
+    scale = scale if scale is not None else d ** -0.5
+    qg = q.reshape(b, hkv, g, d)
+    # scores: (B, Hkv, G, S)
+    scores = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache) * scale
+    if lengths is not None:
+        mask = jnp.arange(s)[None, None, None, :] < lengths[:, None, None, None]
+        scores = jnp.where(mask, scores, -jnp.inf)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = fast_ref.schraudolph_exp(scores - m) if fast else jnp.exp(scores - m)
+    if lengths is not None:
+        e = jnp.where(mask, e, 0.0)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    out = jnp.einsum("bkgs,bskd->bkgd", p, v_cache)
+    return out.reshape(b, h, d)

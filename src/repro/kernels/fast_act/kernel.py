@@ -1,0 +1,75 @@
+"""Pallas TPU kernels for the fast activation approximations.
+
+Elementwise maps over VMEM tiles.  The TPU adaptation of the paper's
+register-batching (§3.3): instead of sizing batches to ``4·(n_xmm−k)``
+XMM registers, the tile is sized so a (block_rows × 128-lane) slab and
+its intermediates fit VMEM; the VPU then executes the polynomial with
+full lane parallelism.  The Schraudolph trick survives intact because
+TPUs are IEEE-754: ``bitcast_convert_type`` compiles to a vector
+reinterpret, exactly like x86's ``movd``-free punning.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile shape: sublane × lane aligned for f32.
+BLOCK_ROWS = 256
+BLOCK_COLS = 128
+
+_EXP_A = 12102203.161561485
+_EXP_B = 127.0 * (2.0 ** 23)
+_EXP_C = 60801.0 * 8.0
+
+
+def _exp_body(x):
+    x = jnp.clip(x, -87.0, 88.0)
+    i = (_EXP_A * x + (_EXP_B - _EXP_C)).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type(i, jnp.float32)
+
+
+def _tanh_body(x):
+    x = jnp.clip(x, -4.97, 4.97)
+    x2 = x * x
+    num = (((36.0 * x2 + 6930.0) * x2 + 270270.0) * x2 + 2027025.0) * x
+    den = (((x2 + 630.0) * x2 + 51975.0) * x2 + 945945.0) * x2 + 2027025.0
+    return num / den
+
+
+def _sigmoid_body(x):
+    return 0.5 * (_tanh_body(0.5 * x) + 1.0)
+
+
+_BODIES = {"exp": _exp_body, "tanh": _tanh_body, "sigmoid": _sigmoid_body}
+
+
+def _elementwise_kernel(x_ref, o_ref, *, fn: str):
+    o_ref[...] = _BODIES[fn](x_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("fn", "interpret"))
+def fast_act_2d(x: jnp.ndarray, fn: str, interpret: bool = True) -> jnp.ndarray:
+    """Apply a fast activation to a 2D f32 array via Pallas.
+
+    The wrapper pads to tile multiples (compile-time shapes, so the pad
+    is free to fuse) and slices back.
+    """
+    m, n = x.shape
+    bm = min(BLOCK_ROWS, max(8, m))
+    bn = min(BLOCK_COLS, max(128, n)) if n >= 128 else n
+    pm = -(-m // bm) * bm
+    pn = -(-n // bn) * bn
+    xp = jnp.pad(x, ((0, pm - m), (0, pn - n)))
+    out = pl.pallas_call(
+        functools.partial(_elementwise_kernel, fn=fn),
+        grid=(pm // bm, pn // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+        interpret=interpret,
+    )(xp)
+    return out[:m, :n]

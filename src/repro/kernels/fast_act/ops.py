@@ -1,0 +1,42 @@
+"""Public jit'd wrappers for the fast activations.
+
+``fast_act(x, fn)`` reshapes any-rank input to 2D, dispatches to the
+Pallas kernel (interpret=True on CPU, compiled on TPU), and restores the
+shape.  ``use_pallas=False`` falls back to the pure-jnp reference (same
+math — used by the CPU-side CompiledNN back end where interpret-mode
+Pallas would be needlessly slow).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import fast_act_2d
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+def fast_act(x: jnp.ndarray, fn: str, use_pallas: bool = False) -> jnp.ndarray:
+    """fn in {'exp','tanh','sigmoid'} (softmax handled at a higher level
+    because it needs the two-pass reduction)."""
+    if not use_pallas:
+        return ref.FAST[fn](x)
+    shape = x.shape
+    if x.ndim == 0:
+        x2 = x.reshape(1, 1)
+    elif x.ndim == 1:
+        x2 = x.reshape(1, -1)
+    else:
+        x2 = x.reshape(-1, shape[-1])
+    y = fast_act_2d(x2.astype(jnp.float32), fn, interpret=not _ON_TPU)
+    return y.reshape(shape)
+
+
+def fast_softmax(x: jnp.ndarray, axis: int = -1, use_pallas: bool = False) -> jnp.ndarray:
+    if not use_pallas:
+        return ref.fast_softmax(x, axis=axis)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = fast_act(x - m, "exp", use_pallas=True)
+    return e / jnp.sum(e, axis=axis, keepdims=True)

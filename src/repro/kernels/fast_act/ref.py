@@ -1,0 +1,92 @@
+"""Pure-jnp oracles for the fast activation approximations (paper §3.4).
+
+Two families, exactly as in the paper:
+
+* ``schraudolph_exp`` — Schraudolph (1999): exploit IEEE-754: writing
+  ``i = A*x + B`` into the *exponent+mantissa* bits of a float yields
+  2^(x/ln2) ≈ exp(x).  One multiply, one f2i convert, one int add, one
+  bitcast ("one multiplication, one float-to-integer conversion and one
+  integer addition, afterwards interpreting the result as a floating
+  point number again").
+* ``cf_tanh`` — Eq. 5: the continued fraction of tanh truncated to the
+  degree-(7,8) rational; ``cf_sigmoid`` via Eq. 4
+  (sigmoid(x) = (tanh(x/2)+1)/2).
+
+These are the *reference semantics* of the approximation (what the
+Pallas kernels must reproduce bit-for-bit up to float assoc); the
+*accuracy* versus the exact functions is a separate, measured quantity
+(see benchmarks/precision.py) — the paper likewise notes the
+approximations "impact the precision of the calculations".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Schraudolph constants for float32.
+# exp(x) = 2^(x/ln2); float32 bits of 2^y for y in [0,1) are approximated
+# linearly.  A scales x into exponent units, B biases to exponent 127,
+# C is Schraudolph's mean-error-minimizing correction (60801 in the
+# double-precision/2^20 formulation; scaled by 8 for float32's 2^23).
+_EXP_A = 12102203.161561485  # 2^23 / ln(2)
+_EXP_B = 127.0 * (2.0 ** 23)
+_EXP_C = 60801.0 * 8.0
+
+
+def schraudolph_exp(x: jnp.ndarray) -> jnp.ndarray:
+    """exp(x) via the IEEE-754 bit trick.  Max relative error ~4%."""
+    x = jnp.asarray(x, jnp.float32)
+    # Clamp to the representable exponent range to avoid int overflow.
+    x = jnp.clip(x, -87.0, 88.0)
+    i = (_EXP_A * x + (_EXP_B - _EXP_C)).astype(jnp.int32)
+    return jax.lax.bitcast_convert_type(i, jnp.float32)
+
+
+def cf_tanh(x: jnp.ndarray) -> jnp.ndarray:
+    """tanh via the truncated continued fraction (paper Eq. 5).
+
+    The rational is accurate below |x|≈4.97 and diverges beyond, so the
+    input is clamped first (the emitted SSE code does the same with
+    min/max ops).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    x = jnp.clip(x, -4.97, 4.97)
+    x2 = x * x
+    num = (((36.0 * x2 + 6930.0) * x2 + 270270.0) * x2 + 2027025.0) * x
+    den = (((x2 + 630.0) * x2 + 51975.0) * x2 + 945945.0) * x2 + 2027025.0
+    return num / den
+
+
+def cf_sigmoid(x: jnp.ndarray) -> jnp.ndarray:
+    """sigmoid(x) = (tanh(x/2) + 1) / 2   (paper Eq. 4)."""
+    x = jnp.asarray(x, jnp.float32)
+    return 0.5 * (cf_tanh(0.5 * x) + 1.0)
+
+
+def fast_softmax(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Two-pass softmax (§3.4) with the Schraudolph exp.
+
+    Max-subtraction keeps the exp argument in a small range, and the
+    normalization divides out most of Schraudolph's multiplicative bias.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    m = jnp.max(x, axis=axis, keepdims=True)
+    e = schraudolph_exp(x - m)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+#: exact counterparts, for precision benchmarking
+EXACT = {
+    "exp": jnp.exp,
+    "tanh": jnp.tanh,
+    "sigmoid": jax.nn.sigmoid,
+    "softmax": jax.nn.softmax,
+}
+
+FAST = {
+    "exp": schraudolph_exp,
+    "tanh": cf_tanh,
+    "sigmoid": cf_sigmoid,
+    "softmax": fast_softmax,
+}

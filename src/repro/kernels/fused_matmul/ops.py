@@ -1,0 +1,92 @@
+"""Jit'd public wrapper around the fused matmul kernel.
+
+Handles padding to tile multiples (compile-time, from static shapes) and
+falls back to the jnp reference when Pallas is not requested (the CPU
+CompiledNN back end) — the *semantics* are identical by construction and
+by test (tests/test_kernels.py sweeps shapes × epilogues).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .kernel import fused_matmul_p
+
+_ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+
+def _pad_to(a: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = -(-a.shape[0] // m0) * m0 - a.shape[0]
+    p1 = -(-a.shape[1] // m1) * m1 - a.shape[1]
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+def _pick_block(m: int, k: int, n: int) -> Tuple[int, int, int]:
+    """VMEM-aware block choice: x(bm,bk) + w(bk,bn) + acc/out(bm,bn)
+    in f32 must fit well under ~16 MiB VMEM; keep MXU-aligned."""
+    bm = min(256, -(-m // 8) * 8)
+    bn = min(256, -(-n // 128) * 128)
+    bk = min(512, -(-k // 128) * 128)
+    return bm, bk, bn
+
+
+def fused_matmul(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    scale: Optional[jnp.ndarray] = None,
+    offset: Optional[jnp.ndarray] = None,
+    *,
+    fn: Optional[str] = None,
+    fast: bool = False,
+    w_layout: str = "io",
+    use_pallas: bool = False,
+    attrs: Optional[dict] = None,
+) -> jnp.ndarray:
+    """y = epilogue(x @ W (+ bias)) with W in 'io' (K,N) or 'oi' (N,K).
+
+    x may be any rank; the contraction is over the last axis.
+    """
+    shape = x.shape
+    k = shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    n = w.shape[1] if w_layout == "io" else w.shape[0]
+    if not use_pallas:
+        y = ref.fused_matmul_ref(
+            x2, w, bias, scale, offset, fn=fn, fast=fast,
+            w_layout=w_layout, attrs=attrs,
+        )
+        return y.reshape(shape[:-1] + (n,))
+
+    m = x2.shape[0]
+    bm, bk, bn = _pick_block(m, k, n)
+    xp = _pad_to(x2, bm, bk)
+    wp = _pad_to(w, bk if w_layout == "io" else bn, bn if w_layout == "io" else bk)
+    pn = wp.shape[1] if w_layout == "io" else wp.shape[0]
+
+    def pad_vec(v):
+        if v is None:
+            return None
+        return jnp.pad(v.astype(jnp.float32), (0, pn - v.shape[0]))
+
+    y = fused_matmul_p(
+        xp,
+        wp.astype(jnp.float32),
+        pad_vec(bias),
+        pad_vec(scale),
+        pad_vec(offset),
+        fn=fn,
+        fast=fast,
+        w_layout=w_layout,
+        block=(bm, bk, bn),
+        interpret=not _ON_TPU,
+        attrs=attrs,
+    )
+    return y[:m, :n].reshape(shape[:-1] + (n,))

@@ -1,0 +1,51 @@
+"""Pure-jnp oracle for the fused matmul + epilogue kernel."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..fast_act import ref as fast_ref
+
+
+def fused_matmul_ref(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    scale: Optional[jnp.ndarray] = None,
+    offset: Optional[jnp.ndarray] = None,
+    *,
+    fn: Optional[str] = None,
+    fast: bool = False,
+    w_layout: str = "io",
+    attrs: Optional[dict] = None,
+) -> jnp.ndarray:
+    attrs = attrs or {}
+    if w_layout == "oi":
+        y = x @ w.T
+    else:
+        y = x @ w
+    if bias is not None:
+        y = y + bias
+    if fn and fn != "linear":
+        if fn == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif fn == "relu6":
+            y = jnp.clip(y, 0.0, 6.0)
+        elif fn == "leaky_relu":
+            y = jnp.where(y >= 0, y, attrs.get("alpha", 0.01) * y)
+        elif fn == "hard_sigmoid":
+            y = jnp.clip(y * 0.2 + 0.5, 0.0, 1.0)
+        elif fn == "elu":
+            y = jnp.where(y >= 0, y, jnp.expm1(y))
+        elif fn == "tanh":
+            y = fast_ref.cf_tanh(y) if fast else jnp.tanh(y)
+        elif fn == "sigmoid":
+            y = fast_ref.cf_sigmoid(y) if fast else jax.nn.sigmoid(y)
+        else:
+            raise NotImplementedError(fn)
+    if scale is not None:
+        y = y * scale + offset
+    return y

@@ -1,0 +1,301 @@
+"""Cell lowering: one (arch × shape × mesh) -> lowered/compiled XLA.
+
+This is the machinery behind the multi-pod dry-run and the roofline
+benchmarks.  Everything is ShapeDtypeStruct-abstract: no parameter,
+cache, or batch tensor is ever allocated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import ArchConfig, ShapeSpec, input_specs
+from ..distributed import sharding as shd
+from ..models import get_model
+from ..training import TrainConfig, make_train_step
+from ..training.optim import adamw_init, opt_state_axes
+
+
+# ---------------------------------------------------------------------------
+# Abstract state/batch specs + shardings
+# ---------------------------------------------------------------------------
+def _specs(tree) -> Any:
+    return jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def _divisible_sharding(mesh, spec: jax.ShapeDtypeStruct, axes):
+    """NamedSharding for one leaf, keeping a logical axis only when its
+    mesh axes evenly divide the dim (jit argument shardings must divide;
+    e.g. vocab=122753 or kv_heads=8 on a 16-way axis fall back to
+    replicated for that dim)."""
+    rules = shd.current_rules()
+    names = set(mesh.axis_names)
+    parts = []
+    used = set()
+    for dim, ax in zip(spec.shape, tuple(axes) + (None,) * len(spec.shape)):
+        val = rules.get(ax) if ax else None
+        if val is None:
+            parts.append(None)
+            continue
+        cand = (val,) if isinstance(val, str) else tuple(val)
+        cand = tuple(a for a in cand if a in names and a not in used)
+        pick = None
+        # full tuple first, then each single axis
+        options = [cand] + [(a,) for a in cand] if len(cand) > 1 \
+            else [cand]
+        for opt in options:
+            if not opt:
+                continue
+            size = 1
+            for a in opt:
+                size *= mesh.shape[a]
+            if size > 1 and dim % size == 0:
+                pick = opt
+                break
+        if pick is None:
+            parts.append(None)
+        else:
+            parts.append(pick[0] if len(pick) == 1 else pick)
+            used.update(pick)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return NamedSharding(mesh, P(*parts))
+
+
+def _shardings(mesh, axes_tree, specs_tree):
+    is_ax = lambda x: isinstance(x, tuple)
+    flat_ax, treedef = jax.tree.flatten(axes_tree, is_leaf=is_ax)
+    flat_sp = jax.tree.leaves(specs_tree)
+    assert len(flat_ax) == len(flat_sp), (len(flat_ax), len(flat_sp))
+    return jax.tree.unflatten(
+        treedef, [_divisible_sharding(mesh, sp, ax)
+                  for ax, sp in zip(flat_ax, flat_sp)])
+
+
+def _batch_sharding(mesh, specs: Dict[str, jax.ShapeDtypeStruct]):
+    """Shard dim0 over (pod, data) when divisible, else replicate."""
+    return {k: _divisible_sharding(mesh, v, ("batch",))
+            for k, v in specs.items()}
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) or 6·N_active·D; decode counts one
+    token per sequence."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens      # forward only
+    return 2.0 * n * shape.global_batch  # decode: 1 token/seq forward
+
+
+# ---------------------------------------------------------------------------
+# Cell -> lowered
+# ---------------------------------------------------------------------------
+def lower_cell(cfg: ArchConfig, shape: ShapeSpec, mesh,
+               train_cfg: Optional[TrainConfig] = None,
+               rules: Optional[Dict[str, Any]] = None):
+    """Lower one cell on `mesh`; returns jax's Lowered object.
+
+    `rules` overrides logical-axis mappings — e.g. {"fsdp": None} turns
+    off ZeRO param sharding for serving cells (TP-resident weights, no
+    per-layer all-gather: the paper's compile-time layout choice made at
+    mesh scale)."""
+    model = get_model(cfg)
+    with shd.use_mesh(mesh, rules=rules):
+        p_axes = model.param_axes()
+        param_specs = _specs(jax.eval_shape(
+            lambda: model.init(jax.random.PRNGKey(0))))
+        param_shardings = _shardings(mesh, p_axes, param_specs)
+        b_specs = input_specs(cfg, shape)
+        b_shardings = _batch_sharding(mesh, b_specs)
+
+        if shape.kind == "train":
+            tc = train_cfg or TrainConfig()
+            step = make_train_step(model, tc)
+            opt_specs = _specs(jax.eval_shape(
+                lambda: adamw_init(param_specs)))
+            state_specs = {"params": param_specs, "opt": opt_specs}
+            state_shardings = {"params": param_shardings,
+                               "opt": _shardings(
+                                   mesh, opt_state_axes(p_axes),
+                                   opt_specs)}
+            fn = jax.jit(step,
+                         in_shardings=(state_shardings, b_shardings),
+                         out_shardings=(state_shardings, None),
+                         donate_argnums=(0,))
+            return fn.lower(state_specs, b_specs)
+
+        cache_specs = _specs(jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len)))
+        c_axes = model.cache_axes()
+        # caches are flat dicts of arrays; axes leaves are tuples
+        cache_shardings = {k: _divisible_sharding(mesh, cache_specs[k],
+                                                  c_axes[k])
+                           for k in cache_specs}
+
+        if shape.kind == "prefill":
+            fn = jax.jit(
+                lambda p, b, c: model.prefill(p, b, c),
+                in_shardings=(param_shardings, b_shardings,
+                              cache_shardings),
+                out_shardings=(None, cache_shardings))
+            return fn.lower(param_specs, b_specs, cache_specs)
+
+        # decode: serve_step — one new token against a seq_len cache
+        fn = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t),
+            in_shardings=(param_shardings, cache_shardings,
+                          b_shardings["tokens"]),
+            out_shardings=(None, cache_shardings),
+            donate_argnums=(1,))
+        return fn.lower(param_specs, cache_specs, b_specs["tokens"])
+
+
+def _cache_sharding(mesh, spec, axes):
+    """NamedSharding for one cache leaf; drop batch sharding when the
+    request batch doesn't divide the batch axes (long_500k B=1)."""
+    n_batch = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n_batch *= mesh.shape[a]
+    fixed = []
+    for dim, ax in zip(spec.shape, axes):
+        if ax == "batch" and dim % n_batch != 0:
+            fixed.append(None)
+        else:
+            fixed.append(ax)
+    return shd.named_sharding(mesh, *fixed)
+
+
+# ---------------------------------------------------------------------------
+# Compiled-artifact analysis
+# ---------------------------------------------------------------------------
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = _DTYPE_BYTES.get(dtype)
+    if n is None:
+        return 0
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in the (post-SPMD) HLO.
+    These are per-device program bytes."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # result = <type> opname(<operands>) — take operand section
+        for op in _COLLECTIVES:
+            marker = f" {op}("
+            # start-fusion variants: all-gather-start(, all-reduce-start(
+            alt = f" {op}-start("
+            idx = stripped.find(marker)
+            if idx < 0:
+                idx = stripped.find(alt)
+            if idx < 0:
+                continue
+            operands = stripped[idx:]
+            operands = operands[operands.find("(") + 1:]
+            depth = 1
+            end = 0
+            for i, ch in enumerate(operands):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        end = i
+                        break
+            operands = operands[:end]
+            for m in _SHAPE_RE.finditer(operands):
+                out[op] += _nbytes(m.group(1), m.group(2))
+            break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def analyze(lowered, compiled, cfg: ArchConfig, shape: ShapeSpec,
+            mesh) -> Dict[str, Any]:
+    """The roofline terms for one compiled cell (per §Roofline).
+
+    ``cost_analysis`` counts while bodies ONCE (a scanned L-layer stack
+    reports ~1/L of its FLOPs), so the primary numbers come from the
+    trip-count-aware HLO analyzer; XLA's raw values are kept alongside
+    for reference.
+    """
+    from .hlo_analysis import analyze_lowered
+    from .mesh import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+
+    chips = int(np.prod(list(mesh.shape.values())))
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):       # older jax returns [dict]
+        cost = cost[0]
+    hc = analyze_lowered(lowered, compiled, chips)
+
+    flops_dev = hc.flops
+    bytes_dev = hc.hbm_bytes
+    coll = hc.collective_bytes
+
+    mem = compiled.memory_analysis()
+    mem_stats = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            mem_stats[k] = int(v)
+
+    # All quantities are per-device (the HLO module is the post-SPMD
+    # per-device program), so dividing by per-chip peaks equals
+    # global/(chips×peak).
+    compute_t = flops_dev / PEAK_FLOPS_BF16
+    memory_t = bytes_dev / HBM_BW
+    collective_t = coll["total"] / ICI_BW
+    terms = {"compute_s": compute_t, "memory_s": memory_t,
+             "collective_s": collective_t}
+    bottleneck = max(terms, key=terms.get)
+
+    mflops = model_flops(cfg, shape)
+    hlo_flops_global = flops_dev * chips
+    return {
+        "arch": cfg.name, "shape": shape.name,
+        "mesh": dict(mesh.shape), "chips": chips,
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collective_bytes_per_device": coll,
+        "unresolved_whiles": hc.unresolved_whiles,
+        "xla_raw_flops": float(cost.get("flops", 0.0)),
+        "xla_raw_bytes": float(cost.get("bytes accessed", 0.0)),
+        "memory_analysis": mem_stats,
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": mflops,
+        "useful_flops_ratio": (mflops / hlo_flops_global
+                               if hlo_flops_global else 0.0),
+        "step_time_bound_s": max(terms.values()),
+        "roofline_fraction": (
+            (mflops / chips / PEAK_FLOPS_BF16) / max(terms.values())
+            if max(terms.values()) > 0 else 0.0),
+    }

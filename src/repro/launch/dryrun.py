@@ -1,0 +1,118 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import — jax locks the
+device count at first init, and the production meshes need 512
+placeholder devices (2 pods × 16 × 16).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+
+Each cell writes a JSON artifact under benchmarks/artifacts/dryrun/
+(memory analysis, cost analysis, collective bytes, roofline terms) that
+EXPERIMENTS.md §Dry-run/§Roofline and benchmarks/roofline.py read.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str, overrides: dict = None) -> dict:
+    from repro.configs import SHAPES, cell_supported, get_config
+    from repro.launch import cells
+    from repro.launch.mesh import make_production_mesh
+
+    cfg = get_config(arch)
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped", "reason": why}
+        _write(out_dir, rec)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    # Baseline train step: 8 microbatches (per-device-per-microbatch
+    # batch 2 on single-pod) — fits the 16 GiB HBM with headroom.
+    from repro.training import TrainConfig
+    lowered = cells.lower_cell(cfg, shape, mesh,
+                               TrainConfig(microbatches=8))
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    print(compiled.memory_analysis())
+    cost = compiled.cost_analysis()
+    print({k: cost[k] for k in ("flops", "bytes accessed")
+           if k in cost})
+
+    rec = cells.analyze(lowered, compiled, cfg, shape, mesh)
+    rec.update({"status": "ok", "mesh_kind": mesh_kind,
+                "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2)})
+    _write(out_dir, rec)
+    return rec
+
+
+def _write(out_dir: str, rec: dict) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec.get('mesh_kind', rec.get('mesh'))}.json"
+    with open(os.path.join(out_dir, name), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/artifacts/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_NAMES, SHAPES
+
+    cells_list = []
+    if args.all:
+        for a in ARCH_NAMES:
+            for s in SHAPES:
+                cells_list.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells_list = [(args.arch, args.shape)]
+
+    failures = 0
+    for arch, shape in cells_list:
+        tag = f"{arch} × {shape} × {args.mesh}"
+        try:
+            rec = run_cell(arch, shape, args.mesh, args.out)
+            status = rec["status"]
+            extra = (f" bottleneck={rec.get('bottleneck')}"
+                     f" rf={rec.get('roofline_fraction', 0):.3f}"
+                     if status == "ok" else f" ({rec.get('reason')})")
+            print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"[dryrun] {tag}: FAILED", flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

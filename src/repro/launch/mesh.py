@@ -1,0 +1,35 @@
+"""Production mesh builders.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run must set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+initialization, and smoke tests must see the real single device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; multi_pod stacks 2 pods -> 512 chips.
+    The "pod" axis composes with "data" for the batch dimension (pure DP
+    across pods), so the only cross-pod collective is the gradient
+    reduce — the realistic 2-pod deployment."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever devices exist, as a 1×N (data, model) mesh — used by
+    tests/examples on CPU."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+# TPU v5e hardware constants (per chip) for the roofline terms.
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # bytes/s
+ICI_BW = 50e9                     # bytes/s per link
+CHIP_HBM_BYTES = 16 * 2 ** 30     # 16 GiB

@@ -1,0 +1,65 @@
+"""Batched serving driver.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
+        --smoke --requests 16 --slots 4 --max-new 16
+
+Builds the engine (compile-at-load, norm-fold, slot-level continuous
+batching) and drains a synthetic request queue, reporting per-phase
+latency stats — the serving analogue of the paper's Table 1 timing.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--no-fold", action="store_true")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs import get_config
+    from repro.inference import Engine, Request
+    from repro.models import get_model
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    model = get_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    t0 = time.perf_counter()
+    eng = Engine(model, params, slots=args.slots, max_len=args.max_len,
+                 fold=not args.no_fold)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        plen = int(rng.integers(4, 17))
+        eng.submit(Request(uid=i,
+                           prompt=rng.integers(0, cfg.vocab, plen),
+                           max_new_tokens=args.max_new))
+    t_build = time.perf_counter() - t0
+    print(f"[serve] engine up in {t_build:.2f}s "
+          f"(norm folds: {eng.fold_report['folds']})", flush=True)
+
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    total_tokens = sum(len(c.tokens) for c in done)
+    print(f"[serve] {len(done)} completions, {total_tokens} tokens "
+          f"in {dt:.2f}s ({total_tokens / max(dt, 1e-9):.1f} tok/s)",
+          flush=True)
+    for c in sorted(done, key=lambda c: c.uid)[:4]:
+        print(f"  uid={c.uid} tokens={c.tokens[:8]}...", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

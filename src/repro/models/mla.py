@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+MLA compresses K/V into a small latent ``c_kv`` (rank 512 + a 64-dim
+shared RoPE key) and re-expands per head.  Two execution forms:
+
+* **train/prefill** — naive expansion: k/v materialized per head and fed
+  to the shared chunked-attention (matmul-heavy, MXU-friendly);
+* **decode** — the *absorbed* form: ``W_UK`` is folded into the query
+  projection and ``W_UV`` into the output projection at compile time, so
+  attention runs entirely in the 576-dim latent space and the KV cache
+  stores only the latent.  This is precisely the paper's Eq. 3 move —
+  "the elements of the matrix are parameters known at compile time, so
+  the memory layout can be chosen arbitrarily" — promoted from a
+  register-shuffle trick to an attention-algebra rewrite.
+
+Cache slices (4-D to match the generic transformer cache):
+    c_kv   (B, S, 1, kv_rank)
+    k_rope (B, S, 1, rope_dim)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import logical
+from . import common as C
+
+
+def mla_init(key, cfg):
+    d, h = cfg.d_model, cfg.n_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = C.split_keys(key, 8)
+    dt = cfg.param_dtype
+    return {
+        "q_down": C.dense_init(ks[0], (d, qr), d, dt),
+        "q_norm": jnp.zeros((qr,), dt),
+        "q_up": C.dense_init(ks[1], (qr, h * (dn + dr)), qr, dt),
+        "kv_down": C.dense_init(ks[2], (d, kvr + dr), d, dt),
+        "kv_norm": jnp.zeros((kvr,), dt),
+        "k_up": C.dense_init(ks[3], (kvr, h * dn), kvr, dt),
+        "v_up": C.dense_init(ks[4], (kvr, h * dv), kvr, dt),
+        "wo": C.dense_init(ks[5], (h * dv, d), h * dv, dt),
+    }
+
+
+def mla_axes(cfg):
+    return {
+        "q_down": ("fsdp", None),
+        "q_norm": (None,),
+        "q_up": (None, "heads"),
+        "kv_down": ("fsdp", None),
+        "kv_norm": (None,),
+        "k_up": (None, "heads"),
+        "v_up": (None, "heads"),
+        "wo": ("heads", "fsdp"),
+    }
+
+
+def _latent(p, cfg, x, positions):
+    """Shared front: queries (nope+rope) and the compressed KV latent."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dr->bsr", x, p["q_down"].astype(x.dtype))
+    q = C.rms_norm(q, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rn->bsn", q, p["q_up"].astype(x.dtype))
+    q = q.reshape(b, s, h, dn + dr)
+    q = logical(q, "batch", "seq", "heads", None)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = C.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    ckr = jnp.einsum("bsd,dr->bsr", x, p["kv_down"].astype(x.dtype))
+    c_kv = C.rms_norm(ckr[..., : cfg.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = C.apply_rope(ckr[..., None, cfg.kv_lora_rank:], positions,
+                          cfg.rope_theta)          # (B,S,1,dr), shared
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(p, cfg, x, positions, window):
+    """Full-sequence form: expand K/V per head, run chunked attention.
+    Returns (out, (c_kv_4d, k_rope_4d)) cache slices."""
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_rope, c_kv, k_rope = _latent(p, cfg, x, positions)
+
+    k_nope = jnp.einsum("bsr,rn->bsn", c_kv,
+                        p["k_up"].astype(x.dtype)).reshape(b, s, h, dn)
+    v = jnp.einsum("bsr,rn->bsn", c_kv,
+                   p["v_up"].astype(x.dtype)).reshape(b, s, h, dv)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, dr))],
+                        axis=-1)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = logical(k, "batch", "seq", "heads", None)
+    v = logical(v, "batch", "seq", "heads", None)
+
+    out = C.chunked_attention(
+        q, k, v, causal=True, window_arr=window,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        scale=(dn + dr) ** -0.5,
+        compute_dtype=cfg.attn_compute_dtype,
+        causal_skip=cfg.causal_skip)
+    out = out.reshape(b, s, h * dv)
+    y = C.row_parallel_out(out, p["wo"], cfg.tp_psum)
+    return (logical(y, "batch", "seq", "embed"),
+            (c_kv[:, :, None, :], k_rope))
+
+
+def mla_decode(p, cfg, x, c_cache, r_cache, lengths, window):
+    """Absorbed decode: x (B,1,D); c_cache (B,S,1,kvr); r_cache
+    (B,S,1,dr); lengths (B,) tokens already cached."""
+    b = x.shape[0]
+    h = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    kvr = cfg.kv_lora_rank
+    positions = lengths[:, None]
+    q_nope, q_rope, c_kv, k_rope = _latent(p, cfg, x, positions)
+
+    # Insert the new latent at each sequence's slot.
+    c_cache = C.ring_insert(c_cache, c_kv[:, 0, None, :], lengths,
+                            cfg.cache_update)
+    r_cache = C.ring_insert(r_cache, k_rope[:, 0], lengths,
+                            cfg.cache_update)
+
+    # Absorb W_UK into q: q_abs = q_nope @ W_UK^T  -> latent space.
+    k_up = p["k_up"].astype(jnp.float32).reshape(kvr, h, dn)
+    q_abs = jnp.einsum("bhd,rhd->bhr", q_nope[:, 0].astype(jnp.float32),
+                       k_up)                               # (B,H,kvr)
+    q_full = jnp.concatenate(
+        [q_abs, q_rope[:, 0].astype(jnp.float32)], axis=-1)  # (B,H,kvr+dr)
+    kv_full = jnp.concatenate([c_cache[:, :, 0], r_cache[:, :, 0]],
+                              axis=-1)                      # (B,S,kvr+dr)
+    out_lat = C.decode_attention_jnp(
+        q_full.astype(x.dtype), kv_full[:, :, None, :],
+        c_cache[:, :, 0][:, :, None, :], lengths + 1,
+        window_arr=window, scale=(dn + dr) ** -0.5,
+        compute_dtype=cfg.attn_compute_dtype)               # (B,H,kvr)
+
+    # Absorb W_UV into the output projection.
+    v_up = p["v_up"].astype(jnp.float32).reshape(kvr, h, dv)
+    out = jnp.einsum("bhr,rhd->bhd", out_lat.astype(jnp.float32), v_up)
+    out = out.reshape(b, 1, h * dv).astype(x.dtype)
+    y = C.row_parallel_out(out, p["wo"], cfg.tp_psum)
+    return logical(y, "batch", "seq", "embed"), (c_cache, r_cache)

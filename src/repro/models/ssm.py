@@ -1,0 +1,330 @@
+"""Mamba-2 (SSD — state-space duality) blocks.
+
+The SSD algorithm computes the selective-SSM recurrence
+
+    h_t = a_t * h_{t-1} + dt_t * (B_t ⊗ x_t)      y_t = C_t · h_t + D x_t
+
+in *chunked matmul form*: intra-chunk terms become (Q×Q) masked matmuls
+(MXU-friendly — the hardware adaptation of the paper's "make the compute
+unit, not the memory system, the limit") and inter-chunk states are
+carried by a short scan over S/Q chunks.  Decode is the O(1)-state
+recurrent update — the SSM analogue of the paper's matrix-vector hot
+loop, with the state playing the role of the register-resident batch.
+
+Shapes: d_inner = expand * d_model, nheads = d_inner / head_dim,
+B/C shared across heads within a group (ngroups = 1 here).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import logical
+from . import common as C
+
+
+def d_inner(cfg) -> int:
+    return cfg.ssm_expand * cfg.d_model
+
+
+def n_heads(cfg) -> int:
+    return d_inner(cfg) // cfg.ssm_head_dim
+
+
+def ssm_init(key, cfg):
+    d = cfg.d_model
+    di, nh, ds = d_inner(cfg), n_heads(cfg), cfg.ssm_state
+    conv_dim = di + 2 * ds                      # x + B + C share the conv
+    ks = C.split_keys(key, 4)
+    dt = cfg.param_dtype
+    return {
+        # in_proj emits [z (di), x+B+C (conv_dim), dt (nh)]
+        "in_proj": C.dense_init(ks[0], (d, di + conv_dim + nh), d, dt),
+        "conv_w": C.dense_init(ks[1], (cfg.ssm_conv, conv_dim),
+                               cfg.ssm_conv, dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(dt),
+        "dt_bias": jnp.zeros((nh,), dt),
+        "d_skip": jnp.ones((nh,), dt),
+        "norm": jnp.zeros((di,), dt),
+        "out_proj": C.dense_init(ks[3], (di, d), di, dt),
+    }
+
+
+def ssm_axes(cfg):
+    return {
+        "in_proj": ("fsdp", "mlp"),
+        "conv_w": (None, "mlp"),
+        "conv_b": ("mlp",),
+        "a_log": (None,),
+        "dt_bias": (None,),
+        "d_skip": (None,),
+        "norm": ("mlp",),
+        "out_proj": ("mlp", "fsdp"),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    di, nh, ds = d_inner(cfg), n_heads(cfg), cfg.ssm_state
+    conv_dim = di + 2 * ds
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + conv_dim]
+    dt = zxbcdt[..., di + conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv1d, width K: y_t = sum_k w_k * x_{t-K+1+k}."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i:i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+            for i in range(k))
+    return jax.nn.silu(y + b.astype(xbc.dtype))
+
+
+def _segsum(a):
+    """log-space cumulative decay matrix: L[i,j] = sum_{j<k<=i} a_k for
+    j <= i, -inf above the diagonal.  a: (..., Q)."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    dif = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, dif, -jnp.inf)
+
+
+def ssd_scan(cfg, x, dt, B, Cc, a_log):
+    """Chunked SSD.  x: (b,S,nh,dh); dt: (b,S,nh); B/C: (b,S,ds).
+    Returns y (b,S,nh,dh) and the final state (b,nh,dh,ds)."""
+    b, s, nh, dh = x.shape
+    ds = B.shape[-1]
+    Q = min(cfg.ssm_chunk, s)
+    pad = (-s) % Q
+    nc = (s + pad) // Q
+
+    A = -jnp.exp(a_log.astype(jnp.float32))              # (nh,) negative
+    dtf = jax.nn.softplus(dt.astype(jnp.float32))        # (b,S,nh)
+    da = dtf * A                                          # log decay
+    xdt = x.astype(jnp.float32) * dtf[..., None]          # (b,S,nh,dh)
+    if pad:
+        # Pad AFTER discretization: da=0 (decay 1) and xdt=0 make padded
+        # steps identities, so the final state equals the state at s-1.
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0)))
+
+    xc = xdt.reshape(b, nc, Q, nh, dh)
+    dac = da.reshape(b, nc, Q, nh)
+    Bc = B.reshape(b, nc, Q, ds).astype(jnp.float32)
+    Cck = Cc.reshape(b, nc, Q, ds).astype(jnp.float32)
+
+    # Intra-chunk (diagonal block): Y = (C B^T ⊙ L) @ xdt
+    L = jnp.exp(_segsum(jnp.moveaxis(dac, -1, -2)))       # (b,nc,nh,Q,Q)
+    cb = jnp.einsum("bnqs,bnks->bnqk", Cck, Bc)           # (b,nc,Q,Q)
+    y_diag = jnp.einsum("bnhqk,bnkhd->bnqhd",
+                        cb[:, :, None] * L, xc)
+
+    # Chunk-final states: S_n = sum_i decay_to_end_i * B_i ⊗ xdt_i
+    cum = jnp.cumsum(dac, axis=2)
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (b,nc,Q,nh)
+    states = jnp.einsum("bnqs,bnqh,bnqhd->bnhsd",
+                        Bc, decay_end, xc)                # (b,nc,nh,ds,dh)
+
+    # Inter-chunk recurrence over chunk states.
+    chunk_decay = jnp.exp(cum[:, :, -1, :])               # (b,nc,nh)
+
+    def step(h, inp):
+        st, dec = inp
+        h = h * dec[..., None, None] + st
+        return h, h
+
+    h0 = jnp.zeros((b, nh, ds, dh), jnp.float32)
+    _, hs = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(states, 1, 0),
+                          jnp.moveaxis(chunk_decay, 1, 0)))
+    hs = jnp.moveaxis(hs, 0, 1)                           # (b,nc,nh,ds,dh)
+    h_prev = jnp.concatenate([h0[:, None], hs[:, :-1]], axis=1)
+
+    # Inter-chunk output: y += C_t · (decay_from_start * h_prev)
+    decay_in = jnp.exp(cum)                                # (b,nc,Q,nh)
+    y_off = jnp.einsum("bnqs,bnqh,bnhsd->bnqhd",
+                       Cck, decay_in, h_prev)
+
+    y = (y_diag + y_off).reshape(b, s + pad, nh, dh)[:, :s]
+    final = hs[:, -1]                                      # (b,nh,ds,dh)
+    return y.astype(x.dtype), final
+
+
+def ssm_apply(p, cfg, x):
+    """Full-sequence block: x (B,S,D) -> (y (B,S,D), final_state)."""
+    zxbcdt = jnp.einsum("bsd,dn->bsn", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    di, ds = d_inner(cfg), cfg.ssm_state
+    xi = xbc[..., :di]
+    B = xbc[..., di:di + ds]
+    Cc = xbc[..., di + ds:]
+    nh, dh = n_heads(cfg), cfg.ssm_head_dim
+    b, s, _ = x.shape
+    y, final = ssd_scan(cfg, xi.reshape(b, s, nh, dh),
+                        dt + p["dt_bias"].astype(dt.dtype), B, Cc,
+                        p["a_log"])
+    y = y + xi.reshape(b, s, nh, dh) * p["d_skip"].astype(x.dtype)[:, None]
+    y = y.reshape(b, s, di)
+    y = C.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsn,nd->bsd", y, p["out_proj"].astype(x.dtype))
+    return logical(out, "batch", "seq", "embed"), final
+
+
+def ssm_prefill(p, cfg, x):
+    """Like ssm_apply but also returns the decode caches (conv tail +
+    final SSM state)."""
+    zxbcdt = jnp.einsum("bsd,dn->bsn", x, p["in_proj"].astype(x.dtype))
+    z, xbc_raw, dt = _split_proj(cfg, zxbcdt)
+    k = cfg.ssm_conv
+    b, s, _ = x.shape
+    # conv tail: last K-1 *pre-activation* inputs, for decode continuity
+    tail = jnp.pad(xbc_raw, ((0, 0), (max(0, k - 1 - s), 0), (0, 0)))[:, -(k - 1):]
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    di, ds = d_inner(cfg), cfg.ssm_state
+    xi, B, Cc = (xbc[..., :di], xbc[..., di:di + ds], xbc[..., di + ds:])
+    nh, dh = n_heads(cfg), cfg.ssm_head_dim
+    y, final = ssd_scan(cfg, xi.reshape(b, s, nh, dh),
+                        dt + p["dt_bias"].astype(dt.dtype), B, Cc,
+                        p["a_log"])
+    y = y + xi.reshape(b, s, nh, dh) * p["d_skip"].astype(x.dtype)[:, None]
+    y = y.reshape(b, s, di)
+    y = C.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsn,nd->bsd", y, p["out_proj"].astype(x.dtype))
+    return logical(out, "batch", "seq", "embed"), (tail, final)
+
+
+def ssm_decode(p, cfg, x, conv_tail, state):
+    """One-token recurrent update.  x: (B,1,D); conv_tail: (B,K-1,conv);
+    state: (B,nh,ds,dh)."""
+    b = x.shape[0]
+    di, ds, k = d_inner(cfg), cfg.ssm_state, cfg.ssm_conv
+    nh, dh = n_heads(cfg), cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,dn->bsn", x, p["in_proj"].astype(x.dtype))
+    z, xbc_new, dt = _split_proj(cfg, zxbcdt)
+
+    window = jnp.concatenate([conv_tail, xbc_new], axis=1)  # (B,K,conv)
+    conv = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                      p["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32))[:, None]
+    xi, B, Cc = (xbc[..., :di], xbc[..., di:di + ds], xbc[..., di + ds:])
+
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dtf = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + p["dt_bias"].astype(jnp.float32))  # (B,nh)
+    a = jnp.exp(dtf * A)                                       # (B,nh)
+    xh = xi[:, 0].reshape(b, nh, dh).astype(jnp.float32)
+    # h <- a h + dt (B ⊗ x)
+    state = (state * a[..., None, None]
+             + jnp.einsum("bs,bhd,bh->bhsd", B[:, 0], xh, dtf))
+    y = jnp.einsum("bs,bhsd->bhd", Cc[:, 0], state)            # (B,nh,dh)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = C.rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bsn,nd->bsd", y, p["out_proj"].astype(x.dtype))
+    return (logical(out, "batch", "seq", "embed"),
+            window[:, 1:], state)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model assembly (attention-free stack)
+# ---------------------------------------------------------------------------
+def init_params(cfg, key):
+    k_emb, k_layers = jax.random.split(key)
+    lks = jax.random.split(k_layers, cfg.num_layers)
+
+    def one(k):
+        return {"ln": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+                "mixer": ssm_init(k, cfg)}
+
+    return {
+        "embed": C.dense_init(k_emb, (cfg.vocab, cfg.d_model),
+                              cfg.d_model, cfg.param_dtype),
+        "layers": jax.vmap(one)(lks),
+        "ln_f": jnp.zeros((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def param_axes(cfg):
+    is_ax = lambda x: isinstance(x, tuple)
+    layer = {"ln": (None,), "mixer": ssm_axes(cfg)}
+    return {
+        "embed": ("vocab", "fsdp"),
+        "layers": jax.tree.map(lambda ax: ("layers",) + ax, layer,
+                               is_leaf=is_ax),
+        "ln_f": (None,),
+    }
+
+
+def _head(cfg, params, x):
+    x = C.rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return C.lm_logits(x, params["embed"].T)     # mamba ties embeddings
+
+
+def forward(cfg, params, tokens, patches=None):
+    x = C.embed_tokens(params["embed"], tokens, cfg.dtype)
+
+    def body(x, lp):
+        h, _ = ssm_apply(lp["mixer"], cfg,
+                         C.rms_norm(x, lp["ln"], cfg.norm_eps))
+        return x + h, None
+
+    x, _ = jax.lax.scan(C.maybe_remat(cfg, body), x, params["layers"])
+    return _head(cfg, params, x), {"aux_loss": jnp.float32(0.0)}
+
+
+def init_cache(cfg, batch, max_len):
+    nh, dh, ds = n_heads(cfg), cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = d_inner(cfg) + 2 * ds
+    L = cfg.num_layers
+    return {
+        "conv": jnp.zeros((L, batch, cfg.ssm_conv - 1, conv_dim), cfg.dtype),
+        "state": jnp.zeros((L, batch, nh, ds, dh), jnp.float32),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def cache_axes(cfg):
+    return {"conv": ("layers", "batch", None, "mlp"),
+            "state": ("layers", "batch", None, "state", None),
+            "pos": ("batch",)}
+
+
+def prefill(cfg, params, tokens, cache, patches=None):
+    b, s = tokens.shape
+    x = C.embed_tokens(params["embed"], tokens, cfg.dtype)
+
+    def body(x, lp):
+        h, (tail, final) = ssm_prefill(lp["mixer"], cfg,
+                                       C.rms_norm(x, lp["ln"], cfg.norm_eps))
+        return x + h, (tail.astype(cfg.dtype), final)
+
+    x, (tails, finals) = jax.lax.scan(body, x, params["layers"])
+    cache = {"conv": tails, "state": finals,
+             "pos": jnp.full((b,), s, jnp.int32)}
+    return _head(cfg, params, x[:, -1:]), cache
+
+
+def decode_step(cfg, params, cache, tokens):
+    x = C.embed_tokens(params["embed"], tokens, cfg.dtype)
+
+    def body(x, xs):
+        lp, conv, state = xs
+        h, conv, state = ssm_decode(lp["mixer"], cfg,
+                                    C.rms_norm(x, lp["ln"], cfg.norm_eps),
+                                    conv, state)
+        return x + h, (conv.astype(cfg.dtype), state)
+
+    x, (convs, states) = jax.lax.scan(
+        body, x, (params["layers"], cache["conv"], cache["state"]))
+    return _head(cfg, params, x), {"conv": convs, "state": states,
+                                   "pos": cache["pos"] + 1}

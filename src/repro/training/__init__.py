@@ -1,0 +1,2 @@
+from .optim import OptConfig, adamw_init, adamw_update, schedule_lr
+from .train import TrainConfig, init_state, make_train_step, make_jitted_train_step, state_axes

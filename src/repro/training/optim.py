@@ -1,0 +1,103 @@
+"""Optimizer: AdamW (from scratch — no optax in this environment) plus
+the LR schedules the assigned archs use (cosine and MiniCPM's WSD).
+
+Optimizer states shard exactly like their parameters; since params carry
+"fsdp" (data-axis) sharding on their fan-in dim, the m/v moments are
+ZeRO-sharded for free — GSPMD inserts the reduce-scatter/all-gather pair
+around the update (see DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"        # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1         # WSD: final fraction spent decaying
+    min_lr_frac: float = 0.1
+
+
+def schedule_lr(cfg: OptConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """LR at `step` (traced).  WSD = warmup/stable/decay (MiniCPM)."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = cfg.total_steps
+    if cfg.schedule == "constant":
+        frac = jnp.float32(1.0)
+    elif cfg.schedule == "wsd":
+        decay_start = t * (1.0 - cfg.decay_frac)
+        # stable at 1.0, then linear decay to min_lr_frac
+        prog = jnp.clip((step - decay_start) / jnp.maximum(t - decay_start, 1),
+                        0.0, 1.0)
+        frac = 1.0 - (1.0 - cfg.min_lr_frac) * prog
+    else:  # cosine
+        prog = jnp.clip(step / t, 0.0, 1.0)
+        frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (
+            1.0 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * frac
+
+
+def adamw_init(params) -> Dict[str, Any]:
+    zeros = lambda p: jax.tree.map(jnp.zeros_like, p)
+    return {"m": zeros(params), "v": zeros(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_axes(param_axes) -> Dict[str, Any]:
+    """Moment tensors shard like their params (ZeRO via fsdp axes)."""
+    return {"m": param_axes, "v": param_axes, "step": ()}
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(cfg: OptConfig, params, grads, opt):
+    """One AdamW step; returns (new_params, new_opt, metrics)."""
+    step = opt["step"] + 1
+    lr = schedule_lr(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mh = m / bc1
+        vh = v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(opt["m"])
+    flat_v = jax.tree.leaves(opt["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return (new_p, {"m": new_m, "v": new_v, "step": step},
+            {"lr": lr, "grad_norm": gnorm})

@@ -1,0 +1,16 @@
+import os
+import sys
+
+# Tests run on the REAL single CPU device (the 512-device override is
+# only for the dry-run, per the assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,83 @@
+"""Graph IR: construction, shape inference, toposort, hashing."""
+
+import numpy as np
+import pytest
+
+from repro.core import Graph, ModelBuilder
+from repro.core.graph import TensorSpec
+
+
+def small_graph():
+    mb = ModelBuilder()
+    x = mb.input((8, 8, 3))
+    h = mb.conv2d(x, 4, (3, 3), activation="relu")
+    h = mb.batchnorm(h)
+    h = mb.maxpool(h)
+    h = mb.flatten(h)
+    h = mb.dense(h, 10)
+    return mb.build([h]), x, h
+
+
+def test_shape_inference():
+    g, x, out = small_graph()
+    specs = g.infer_shapes()
+    assert specs[out].shape == (10,)
+    assert specs[x].shape == (8, 8, 3)
+
+
+def test_duplicate_names_rejected():
+    g = Graph()
+    g.add_input("a", (4,))
+    with pytest.raises(ValueError):
+        g.add_input("a", (4,))
+    g.add_param("w", np.zeros((4, 4), np.float32))
+    with pytest.raises(ValueError):
+        g.add_param("w", np.zeros((2, 2), np.float32))
+
+
+def test_unknown_tensor_rejected():
+    g = Graph()
+    g.add_input("a", (4,))
+    with pytest.raises(ValueError):
+        g.add_node("add", "bad", ["a", "nonexistent"])
+
+
+def test_toposort_detects_disorder():
+    g, _, _ = small_graph()
+    order = g.toposort()
+    assert len(order) == len(g.nodes)
+    # shuffle nodes; toposort must still produce a valid order
+    g.nodes = list(reversed(g.nodes))
+    order = g.toposort()
+    seen = set(g.inputs)
+    for n in order:
+        assert all(t in seen for t in n.inputs)
+        seen.add(n.output)
+
+
+def test_structure_hash_ignores_weights_but_not_shape():
+    g1, _, _ = small_graph()
+    g2, _, _ = small_graph()
+    assert g1.structure_hash() == g2.structure_hash()
+    g2.params[next(iter(g2.params))] += 1.0   # weight values: no change
+    assert g1.structure_hash() == g2.structure_hash()
+    mb = ModelBuilder()
+    x = mb.input((8, 8, 3))
+    h = mb.conv2d(x, 8, (3, 3))               # different width
+    g3 = mb.build([h])
+    assert g1.structure_hash() != g3.structure_hash()
+
+
+def test_conv_padding_variants():
+    for padding, expect in [("same", (8, 8)), ("valid", (6, 6)),
+                            (((2, 2), (1, 1)), (10, 8))]:
+        mb = ModelBuilder()
+        x = mb.input((8, 8, 3))
+        h = mb.conv2d(x, 4, (3, 3), padding=padding)
+        g = mb.build([h])
+        assert g.infer_shapes()[h].shape[:2] == expect
+
+
+def test_tensor_spec_sizes():
+    t = TensorSpec((4, 4, 2), "float32")
+    assert t.size == 32 and t.nbytes == 128

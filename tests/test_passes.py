@@ -1,0 +1,140 @@
+"""Compiler passes: each validated against the SimpleNN oracle, plus
+memory-plan invariants (property-based)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import CompiledModel, ModelBuilder, SimpleNN
+from repro.core.passes import run_pipeline, plan_memory
+from repro.core.simple import random_params_like
+
+
+def build_cnn(seed=0, act="relu"):
+    mb = ModelBuilder().seed(seed)
+    x = mb.input((16, 16, 3))
+    h = mb.zero_pad(x, ((1, 1), (1, 1)))
+    h = mb.conv2d(h, 8, (3, 3), padding="valid")
+    h = mb.batchnorm(h)
+    h = mb.activation(h, act)
+    h = mb.conv2d(h, 8, (3, 3), activation=act)
+    h = mb.batchnorm(h)
+    h = mb.maxpool(h)
+    skip = h
+    h = mb.conv2d(h, 8, (3, 3))
+    h = mb.add(h, skip)
+    h = mb.global_avg_pool(h)
+    h = mb.dense(h, 10)
+    h = mb.softmax(h)
+    return mb.build([h]), h
+
+
+@pytest.mark.parametrize("act", ["relu", "tanh", "sigmoid", "relu6"])
+def test_pipeline_matches_oracle(act, rng):
+    g, out = build_cnn(seed=1, act=act)
+    inp = rng.standard_normal((2, 16, 16, 3)).astype(np.float32)
+    want = SimpleNN(g)(input=inp)[out]
+    got = CompiledModel(g).apply(input=inp)[out]
+    np.testing.assert_allclose(np.asarray(want), np.asarray(got),
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_each_pass_individually(rng):
+    g, out = build_cnn(seed=2)
+    inp = rng.standard_normal((2, 16, 16, 3)).astype(np.float32)
+    want = np.asarray(SimpleNN(g)(input=inp)[out])
+    for passes in [(), ("canonicalize",), ("canonicalize", "fuse_pad"),
+                   ("canonicalize", "fuse_activation"),
+                   ("canonicalize", "fuse_activation", "fold_batchnorm"),
+                   ("canonicalize", "fold_constants"),
+                   ("canonicalize", "optimize_layout")]:
+        got = CompiledModel(g, passes=passes).apply(input=inp)[out]
+        np.testing.assert_allclose(want, np.asarray(got),
+                                   rtol=2e-5, atol=2e-6,
+                                   err_msg=f"passes={passes}")
+
+
+def test_bn_folding_removes_bn_nodes():
+    g, _ = build_cnn(seed=3)
+    opt, report = run_pipeline(g)
+    assert not any(n.op == "batchnorm" for n in opt.nodes)
+    folded = [p for p in report["passes"] if p["pass"] == "fold_batchnorm"]
+    assert folded and folded[0]["nodes_after"] < folded[0]["nodes_before"]
+
+
+def test_activation_fusion_sets_epilogues():
+    g, _ = build_cnn(seed=4)
+    opt, _ = run_pipeline(g)
+    assert any(n.epilogue not in (None, "linear") for n in opt.nodes)
+    # lone softmax stays a separate node (two-pass, not fusable)
+    assert any(n.op in ("softmax", "activation") and
+               n.attrs.get("fn", n.op) == "softmax" for n in opt.nodes)
+
+
+def test_fast_precision_close():
+    g, out = build_cnn(seed=5, act="sigmoid")
+    inp = np.random.default_rng(5).standard_normal(
+        (2, 16, 16, 3)).astype(np.float32)
+    want = np.asarray(SimpleNN(g)(input=inp)[out])
+    got = np.asarray(CompiledModel(g, precision="fast").apply(input=inp)[out])
+    assert np.max(np.abs(want - got)) < 0.05   # paper: approx trade-off
+
+
+# ---------------------------------------------------------------------------
+# memory planner invariants
+# ---------------------------------------------------------------------------
+def test_memory_plan_no_lifetime_overlap():
+    g, _ = build_cnn(seed=6)
+    opt, _ = run_pipeline(g)
+    plan = plan_memory(opt)
+    order = opt.toposort()
+    produced = {n.output: i for i, n in enumerate(order)}
+    last_use = dict(produced)
+    for i, n in enumerate(order):
+        for t in n.inputs:
+            last_use[t] = i
+    for t in opt.outputs:
+        last_use[t] = len(order)
+    asg = plan.assignments
+    names = list(asg)
+    for i, a in enumerate(names):
+        for b in names[i + 1:]:
+            if a not in produced or b not in produced:
+                continue
+            # in-place aliases intentionally share memory with a tensor
+            # whose lifetime ends exactly where theirs begins
+            if asg[a].inplace_of == b or asg[b].inplace_of == a:
+                continue
+            lo = max(produced[a], produced[b])
+            hi = min(last_use.get(a, 0), last_use.get(b, 0))
+            if lo < hi:   # strictly overlapping lifetimes
+                a0, a1 = asg[a].offset, asg[a].offset + asg[a].nbytes
+                b0, b1 = asg[b].offset, asg[b].offset + asg[b].nbytes
+                assert a1 <= b0 or b1 <= a0, (a, b)
+
+
+def test_memory_plan_saves_vs_naive():
+    g, _ = build_cnn(seed=7)
+    opt, report = run_pipeline(g)
+    stats = report["memory_plan"]
+    assert stats["arena_bytes"] <= stats["naive_bytes"]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=6), min_size=2,
+                max_size=6),
+       st.integers(min_value=0, max_value=10_000))
+def test_memory_plan_random_chains(widths, seed):
+    """Random sequential CNNs: the plan must always be valid and no
+    larger than naive."""
+    mb = ModelBuilder().seed(seed)
+    x = mb.input((8, 8, widths[0]))
+    h = x
+    for w in widths:
+        h = mb.conv2d(h, w, (3, 3), activation="relu")
+    g = mb.build([h])
+    opt, report = run_pipeline(g)
+    stats = report["memory_plan"]
+    assert 0 < stats["arena_bytes"] <= stats["naive_bytes"]

@@ -1,0 +1,96 @@
+"""§Perf optimization flags: numerical equivalence with the faithful
+baseline (the optimized program must compute the same function)."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import get_model
+
+
+def _f32(arch, **kw):
+    return dataclasses.replace(get_config(arch, smoke=True),
+                               dtype="float32", **kw)
+
+
+def _logits(cfg, params, toks):
+    m = get_model(cfg)
+    l, _ = m.forward(params, {"tokens": toks})
+    return l
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "gemma3-27b",
+                                  "mixtral-8x22b"])
+def test_causal_skip_bit_exact(arch):
+    cfg0 = _f32(arch)
+    cfg1 = _f32(arch, causal_skip=True)
+    params = get_model(cfg0).init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 40), 0, cfg0.vocab)
+    np.testing.assert_array_equal(
+        np.asarray(_logits(cfg0, params, toks)),
+        np.asarray(_logits(cfg1, params, toks)))
+
+
+def test_scatter_cache_matches_where():
+    cfg0 = _f32("qwen2.5-14b")
+    cfg1 = _f32("qwen2.5-14b", cache_update="scatter")
+    m0, m1 = get_model(cfg0), get_model(cfg1)
+    params = m0.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 20), 0, cfg0.vocab)
+    caches = [m.init_cache(2, 32) for m in (m0, m1)]
+    outs = []
+    for m, c in zip((m0, m1), caches):
+        lg, c = m.prefill(params, {"tokens": toks[:, :16]}, c)
+        lg, c = m.decode_step(params, c, toks[:, 16:17])
+        lg, c = m.decode_step(params, c, toks[:, 17:18])
+        outs.append(np.asarray(lg))
+    np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_bf16_attn_close():
+    cfg0 = _f32("deepseek-7b")
+    cfg1 = _f32("deepseek-7b", attn_compute_dtype="bfloat16")
+    params = get_model(cfg0).init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg0.vocab)
+    l0 = np.asarray(_logits(cfg0, params, toks))
+    l1 = np.asarray(_logits(cfg1, params, toks))
+    scale = np.abs(l0).max()
+    assert np.abs(l0 - l1).max() < 0.01 * max(scale, 1.0)
+
+
+def test_tp_psum_noop_without_mesh():
+    """tp_psum falls back to plain einsum on a single device."""
+    cfg0 = _f32("qwen2.5-14b")
+    cfg1 = _f32("qwen2.5-14b", tp_psum=True)
+    params = get_model(cfg0).init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg0.vocab)
+    np.testing.assert_array_equal(
+        np.asarray(_logits(cfg0, params, toks)),
+        np.asarray(_logits(cfg1, params, toks)))
+
+
+def test_cast_params_training_close():
+    from repro.training import OptConfig, TrainConfig, init_state
+    from repro.training.train import make_train_step
+    cfg = _f32("deepseek-7b")
+    m = get_model(cfg)
+    batch = {
+        "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                                     cfg.vocab),
+        "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 16), 0,
+                                     cfg.vocab),
+    }
+    mk = lambda cast: TrainConfig(
+        opt=OptConfig(lr=1e-3, total_steps=10, warmup_steps=0),
+        cast_params=cast)
+    s0 = init_state(m, jax.random.PRNGKey(0))
+    s1 = init_state(m, jax.random.PRNGKey(0))
+    _, m0 = make_train_step(m, mk(False))(s0, batch)
+    _, m1 = make_train_step(m, mk(True))(s1, batch)
+    assert abs(float(m0["loss"]) - float(m1["loss"])) < 0.02
+    assert np.isfinite(float(m1["grad_norm"]))

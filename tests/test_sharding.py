@@ -1,0 +1,85 @@
+"""Sharding rules + a real multi-device SPMD check in a subprocess
+(8 forced host devices — the main pytest process keeps the 1 real
+device, per the assignment)."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+
+def test_spec_for_dedups_mesh_axes():
+    spec = shd.spec_for("batch", "seq", "heads")
+    assert spec == P(("pod", "data"), None, "model")
+    # "model" may appear once: kv_heads after heads degrades to None
+    spec = shd.spec_for("heads", "kv_heads")
+    assert spec == P("model", None)
+
+
+def test_logical_noop_without_mesh():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 4))
+    y = shd.logical(x, "batch", "embed")
+    assert (x == y).all()
+
+
+def test_divisible_sharding_fallback():
+    from repro.launch.cells import _divisible_sharding
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = jax.ShapeDtypeStruct((7, 16), "float32")
+    with shd.use_mesh(mesh):
+        s = _divisible_sharding(mesh, spec, ("vocab", "fsdp"))
+    # axes of size 1 are dropped entirely (no >1 divisor)
+    assert s.spec == P(None, None)
+
+
+_SPMD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import get_model
+    from repro.training import OptConfig, TrainConfig, init_state, \\
+        make_jitted_train_step
+    from repro.distributed import sharding as shd
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = get_config("{arch}", smoke=True)
+    m = get_model(cfg)
+    tc = TrainConfig(opt=OptConfig(lr=1e-3, total_steps=4,
+                                   warmup_steps=0), microbatches=2)
+    with shd.use_mesh(mesh):
+        state = init_state(m, jax.random.PRNGKey(0))
+        step = make_jitted_train_step(m, tc, mesh=mesh, donate=False)
+        batch = {{
+            "tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32),
+                                         0, cfg.vocab),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (4, 32),
+                                         0, cfg.vocab),
+        }}
+        losses = []
+        for _ in range(3):
+            state, metrics = step(state, batch)
+            losses.append(float(metrics["loss"]))
+    assert all(l == l for l in losses), losses     # no NaN
+    assert losses[-1] < losses[0], losses          # learns the batch
+    print("SPMD_OK", losses)
+""")
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "mixtral-8x22b"])
+def test_spmd_train_step_8dev(arch):
+    """Real SPMD execution on 8 host devices: the same model code +
+    sharding rules as the production mesh, shrunk to (2, 4)."""
+    out = subprocess.run(
+        [sys.executable, "-c", _SPMD_SCRIPT.format(arch=arch)],
+        capture_output=True, text=True, cwd=".", timeout=900)
+    assert "SPMD_OK" in out.stdout, out.stdout + out.stderr

@@ -1,0 +1,94 @@
+"""End-to-end behaviour: the paper's complete flow (build → compile →
+infer) plus save/load, the compile-time measurement, and property-based
+checks on the compiled-vs-oracle invariant."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import (CompiledModel, ModelBuilder, SimpleNN, load_model,
+                        save_model)
+
+
+def ball_classifier(seed=0):
+    """The shape of B-Human's ball classifier (paper Table 1, C-BH)."""
+    mb = ModelBuilder().seed(seed)
+    x = mb.input((32, 32, 1))
+    h = mb.conv2d(x, 8, (3, 3), strides=(2, 2), activation="relu")
+    h = mb.batchnorm(h)
+    h = mb.conv2d(h, 16, (3, 3), strides=(2, 2), activation="relu")
+    h = mb.conv2d(h, 32, (3, 3), strides=(2, 2), activation="relu")
+    h = mb.flatten(h)
+    h = mb.dense(h, 64, activation="relu")
+    h = mb.dense(h, 2)
+    h = mb.softmax(h)
+    return mb.build([h]), h
+
+
+def test_full_flow_compiled_equals_oracle(rng):
+    g, out = ball_classifier()
+    x = rng.standard_normal((4, 32, 32, 1)).astype(np.float32)
+    want = np.asarray(SimpleNN(g)(input=x)[out])
+    cm = CompiledModel(g)
+    got = np.asarray(cm.apply(input=x)[out])
+    np.testing.assert_allclose(want, got, rtol=2e-5, atol=1e-6)
+    assert cm.compile_time is not None and cm.compile_time > 0
+
+
+def test_save_load_roundtrip(tmp_path, rng):
+    g, out = ball_classifier(seed=3)
+    path = str(tmp_path / "model.npz")
+    save_model(g, path)
+    g2 = load_model(path)
+    x = rng.standard_normal((2, 32, 32, 1)).astype(np.float32)
+    a = np.asarray(SimpleNN(g)(input=x)[out])
+    b = np.asarray(SimpleNN(g2)(input=x)[out])
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+    assert g.structure_hash() == g2.structure_hash()
+
+
+def test_compile_cache_reused():
+    g, _ = ball_classifier(seed=4)
+    cm = CompiledModel(g)
+    f1 = cm.compile(batch_size=2)
+    t1 = cm.compile_time
+    f2 = cm.compile(batch_size=2)
+    assert f1 is f2 and cm.compile_time == t1
+    f3 = cm.compile(batch_size=3)          # new specialization
+    assert f3 is not f1
+
+
+def test_framework_mode_shares_program_across_weights(rng):
+    g, out = ball_classifier(seed=5)
+    x = rng.standard_normal((1, 32, 32, 1)).astype(np.float32)
+    cm = CompiledModel(g, embed_weights=False)
+    got = np.asarray(cm.apply(input=x)[out])
+    want = np.asarray(SimpleNN(g)(input=x)[out])
+    np.testing.assert_allclose(want, got, rtol=2e-5, atol=1e-6)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       batch=st.integers(1, 3),
+       act=st.sampled_from(["relu", "tanh", "sigmoid", "elu"]))
+def test_property_compiled_equals_oracle(seed, batch, act):
+    """Property: for random small CNNs, the optimized compiled program
+    computes the same function as the unoptimized oracle."""
+    rng = np.random.default_rng(seed)
+    mb = ModelBuilder().seed(seed)
+    x = mb.input((8, 8, 2))
+    h = mb.conv2d(x, 4, (3, 3), activation=act)
+    h = mb.batchnorm(h)
+    if seed % 2:
+        h = mb.zero_pad(h)
+        h = mb.conv2d(h, 4, (3, 3), padding="valid")
+        h = mb.activation(h, act)
+    h = mb.global_avg_pool(h)
+    h = mb.dense(h, 3)
+    g = mb.build([h])
+    inp = rng.standard_normal((batch, 8, 8, 2)).astype(np.float32)
+    want = np.asarray(SimpleNN(g)(input=inp)[h])
+    got = np.asarray(CompiledModel(g).apply(input=inp)[h])
+    np.testing.assert_allclose(want, got, rtol=5e-5, atol=5e-6)
