@@ -8,7 +8,7 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import CompiledModel, SimpleNN
+import repro
 from repro.kernels.fast_act import ref as fa
 
 from .table1_models import SUITE
@@ -43,12 +43,14 @@ def end_to_end_errors() -> Dict[str, Dict[str, float]]:
         in_name = next(iter(g.inputs))
         x = rng.standard_normal((2,) + g.inputs[in_name].shape) \
             .astype(np.float32)
-        want = np.asarray(list(SimpleNN(g)(**{in_name: x}).values())[0])
-        exact = np.asarray(list(
-            CompiledModel(g).apply(**{in_name: x}).values())[0])
-        fast = np.asarray(list(
-            CompiledModel(g, precision="fast").apply(
-                **{in_name: x}).values())[0])
+        out_name = g.outputs[0]
+        oracle = repro.compile(g, repro.CompileOptions(target="interpret"))
+        want = np.asarray(oracle(**{in_name: x})[out_name])
+        exact = np.asarray(
+            repro.compile(g, repro.CompileOptions())(**{in_name: x})[out_name])
+        fast = np.asarray(
+            repro.compile(g, repro.CompileOptions(precision="fast"))(
+                **{in_name: x})[out_name])
         out[name] = {
             "exact_vs_oracle": float(np.max(np.abs(want - exact))),
             "fast_vs_oracle": float(np.max(np.abs(want - fast))),

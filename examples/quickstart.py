@@ -1,9 +1,10 @@
-"""Quickstart: the paper's complete flow in 40 lines.
+"""Quickstart: the paper's complete flow through the unified API.
 
-Build a CNN (the front end), compile it at load time (the paper's
-contribution), validate against the SimpleNN oracle, and time
-compiled-vs-interpreted — then do the same flow for an LLM: compile a
-decode step and generate tokens.
+Build a CNN (the front end), then ``repro.compile`` it — one entry
+point, explicit options, named targets.  Validate the "jit" target
+against the "interpret" oracle, then run the same funnel for an LLM:
+the "engine" target wraps the framework-scale model + serving engine
+behind the identical Executable protocol.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,9 +13,8 @@ import time
 
 import numpy as np
 
-import jax
-
-from repro.core import CompiledModel, ModelBuilder, SimpleNN
+import repro
+from repro.core import ModelBuilder
 
 
 def cnn_flow():
@@ -30,32 +30,39 @@ def cnn_flow():
     out = mb.softmax(h)
     graph = mb.build([out])
 
-    model = CompiledModel(graph)          # optimize + jit at load time
+    exe = repro.compile(graph, repro.CompileOptions(target="jit"))
+    oracle = repro.compile(graph, repro.CompileOptions(target="interpret"))
     img = np.random.default_rng(0).standard_normal(
         (1, 32, 32, 3)).astype(np.float32)
 
-    got = model.apply(input=img)[out]
-    want = SimpleNN(graph)(input=img)[out]
+    got = exe(input=img)[out]
+    want = oracle(input=img)[out]
     print(f"  compiled == oracle: max|Δ| = "
           f"{float(abs(np.asarray(got) - np.asarray(want)).max()):.2e}")
-    print(f"  compile time: {model.compile_time * 1e3:.1f} ms")
+    print(f"  compile time: {exe.compile_time * 1e3:.1f} ms")
+    cost = exe.cost_summary()
     print(f"  passes: " + ", ".join(
         f"{p['pass']}({p['nodes_before']}→{p['nodes_after']})"
-        for p in model.report["passes"]))
-    print(f"  memory plan: {model.report['memory_plan']}")
+        for p in cost["passes"]))
+    print(f"  memory plan: {cost['memory_plan']}")
+
+    # The artifact is portable: serialize, ship, deserialize, run.
+    blob = exe.serialize()
+    again = repro.deserialize(blob)
+    print(f"  serialized executable: {len(blob)} bytes; "
+          f"round-trip max|Δ| = "
+          f"{float(abs(np.asarray(again(input=img)[out]) - np.asarray(got)).max()):.2e}")
 
 
 def llm_flow():
-    print("== LLM flow (the same idea at framework scale) ==")
+    print("== LLM flow (the same funnel at framework scale) ==")
     from repro.configs import get_config
-    from repro.inference import Engine, Request
-    from repro.models import get_model
+    from repro.inference import Request
 
     cfg = get_config("qwen2.5-14b", smoke=True)
-    m = get_model(cfg)
-    params = m.init(jax.random.PRNGKey(0))
     t0 = time.perf_counter()
-    eng = Engine(m, params, slots=2, max_len=64)
+    exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
+    eng = exe.serve(slots=2, max_len=64)
     eng.submit(Request(uid=0, prompt=np.arange(8) % cfg.vocab,
                        max_new_tokens=12))
     out = eng.run()[0]
@@ -63,6 +70,7 @@ def llm_flow():
           f"{time.perf_counter() - t0:.1f}s (incl. compile); "
           f"norm folds applied: {eng.fold_report['folds']}")
     print(f"  tokens: {out.tokens}")
+    print(f"  cost: {exe.cost_summary()}")
 
 
 if __name__ == "__main__":

@@ -8,20 +8,17 @@ import time
 
 import numpy as np
 
-import jax
-
+import repro
 from repro.configs import get_config
-from repro.inference import Engine, Request
-from repro.models import get_model
+from repro.inference import Request
 
 
 def main():
     cfg = get_config("mixtral-8x22b", smoke=True)   # MoE serving
-    model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
 
     t0 = time.perf_counter()
-    eng = Engine(model, params, slots=4, max_len=96)
+    exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
+    eng = exe.serve(slots=4, max_len=96)
     print(f"engine compiled in {time.perf_counter() - t0:.1f}s "
           f"(folds={eng.fold_report['folds']})")
 

@@ -1,0 +1,57 @@
+#!/usr/bin/env bash
+# Smoke test for the unified repro.compile() API:
+#   1. compile one small CNN per target ("interpret", "jit", "pallas")
+#      and check each against the oracle;
+#   2. re-compile the "jit" model in a SECOND PROCESS and assert the
+#      persistent executable cache hits (no XLA recompilation).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+export REPRO_CACHE_DIR="$(mktemp -d)"
+trap 'rm -rf "$REPRO_CACHE_DIR"' EXIT
+
+run_targets() {
+python - "$1" <<'EOF'
+import sys
+
+import numpy as np
+
+import repro
+from repro.core import ModelBuilder
+
+expect_hit = sys.argv[1] == "hit"
+
+mb = ModelBuilder().seed(0)
+x = mb.input((16, 16, 3))
+h = mb.conv2d(x, 8, (3, 3), activation="relu")
+h = mb.batchnorm(h)
+h = mb.maxpool(h)
+h = mb.global_avg_pool(h)
+out = mb.softmax(mb.dense(h, 4))
+g = mb.build([out])
+img = np.random.default_rng(0).standard_normal((1, 16, 16, 3)).astype(np.float32)
+
+want = np.asarray(
+    repro.compile(g, repro.CompileOptions(target="interpret"))(input=img)[out])
+for target in ("jit", "pallas"):
+    exe = repro.compile(g, repro.CompileOptions(target=target))
+    got = np.asarray(exe(input=img)[out])
+    err = float(np.abs(want - got).max())
+    info = exe.cache_info()
+    print(f"[smoke] target={target:<9} max|err|={err:.2e} "
+          f"compile={exe.compile_time * 1e3:.0f}ms cache={info}")
+    assert err < 1e-4, f"{target} disagrees with the oracle: {err}"
+    if expect_hit and target == "jit":
+        assert info["hits"] >= 1 and info["misses"] == 0, \
+            f"expected a cache hit in the second process, got {info}"
+print(f"[smoke] {'cache-hit' if expect_hit else 'cold'} pass OK")
+EOF
+}
+
+echo "[smoke] pass 1 (cold cache: $REPRO_CACHE_DIR)"
+run_targets cold
+echo "[smoke] pass 2 (fresh process, cache must hit)"
+run_targets hit
+echo "[smoke] OK"

@@ -1,0 +1,38 @@
+"""repro — a JIT compiler for neural network inference (JAX/Pallas).
+
+The public surface is one funnel::
+
+    import repro
+
+    exe = repro.compile(graph, repro.CompileOptions(target="jit"))
+    out = exe(input=x)
+
+See ``repro.api`` for targets, options and the executable cache;
+``repro.core`` for the graph IR, passes and the oracle interpreter.
+
+Attribute access is lazy (PEP 562): ``import repro`` must stay free of
+jax so entry points like ``repro.launch.dryrun`` can pin ``XLA_FLAGS``
+before jax initializes.
+"""
+
+_API_NAMES = (
+    "CompileOptions",
+    "Executable",
+    "available_targets",
+    "compile",
+    "deserialize",
+    "register_target",
+)
+
+__all__ = list(_API_NAMES)
+
+
+def __getattr__(name):
+    if name in _API_NAMES:
+        from . import api
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(list(globals()) + list(_API_NAMES))

@@ -1,0 +1,86 @@
+"""repro.api — the single compilation funnel.
+
+    import repro
+    exe = repro.compile(graph, repro.CompileOptions(target="jit"))
+    out = exe(input=x)
+
+One entry point (`compile`), one options object (`CompileOptions`), one
+result protocol (`Executable`), a named-target registry, and a
+persistent on-disk executable cache.  The legacy ``CompiledModel`` is a
+deprecated shim over this package.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from ..core.graph import Graph
+from .cache import ExecutableCache, resolve_cache_dir
+from .executable import Executable, deserialize
+from .options import CompileOptions
+from .targets import (available_targets, get_target, register_target,
+                      GraphExecutable, InterpretExecutable, JitExecutable)
+
+_GRAPH_TARGET_HINT = (
+    "graph-IR targets take a repro.core.Graph; pass "
+    "CompileOptions(target='engine') to compile a framework-scale "
+    "ArchConfig/Model"
+)
+
+
+@register_target("engine")
+def _build_engine(model_or_cfg, options: CompileOptions, **kw):
+    from .engine_adapter import ModelExecutable  # lazy: pulls the model zoo
+    return ModelExecutable(model_or_cfg, options, **kw)
+
+
+def compile(model, options: Optional[CompileOptions] = None,
+            **kw) -> Executable:
+    """Compile ``model`` into an :class:`Executable`.
+
+    ``model`` is either a graph IR (:class:`repro.core.Graph`) — routed
+    to the target named in ``options.target`` — or a framework-scale
+    ``ArchConfig``/``models.api.Model``, routed to the ``"engine"``
+    adapter.  Remaining keyword args override ``CompileOptions`` fields
+    (``repro.compile(g, target="interpret")``), except ``params`` /
+    ``init_seed`` which are forwarded to the engine adapter.
+    """
+    factory_kw = {k: kw.pop(k) for k in ("params", "init_seed") if k in kw}
+    if options is None:
+        options = CompileOptions()
+    if kw:
+        options = options.replace(**kw)
+
+    if isinstance(model, Graph):
+        if options.target == "engine":
+            raise TypeError("target='engine' compiles ArchConfig/Model, "
+                            "not a graph IR; use 'jit'/'pallas'/'interpret'")
+        if factory_kw:
+            raise TypeError(f"unexpected args for graph targets: "
+                            f"{sorted(factory_kw)}")
+        return get_target(options.target)(model, options)
+
+    is_cfg = hasattr(model, "family") and hasattr(model, "name")
+    is_model = hasattr(model, "cfg") and hasattr(model, "forward")
+    if not (is_cfg or is_model):
+        raise TypeError(f"cannot compile {type(model).__name__}: expected "
+                        f"a Graph, ArchConfig or Model")
+    if options.target != "engine":
+        raise TypeError(f"target {options.target!r}: {_GRAPH_TARGET_HINT}")
+    return get_target("engine")(model, options, **factory_kw)
+
+
+__all__ = [
+    "CompileOptions",
+    "Executable",
+    "ExecutableCache",
+    "GraphExecutable",
+    "InterpretExecutable",
+    "JitExecutable",
+    "available_targets",
+    "compile",
+    "deserialize",
+    "get_target",
+    "register_target",
+    "resolve_cache_dir",
+]

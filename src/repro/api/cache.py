@@ -1,0 +1,113 @@
+"""Persistent on-disk executable cache.
+
+The paper measures compilation time as part of model load; here we
+amortize it *across processes*: the ``"jit"``/``"pallas"`` targets lower
+ahead-of-time via ``jax.jit(...).lower(...).compile()`` and the
+resulting XLA executable is serialized (``jax.experimental.
+serialize_executable``) under a key of ``structure_hash × weights ×
+options × batch × jax-version × backend``.  A second process compiling
+the same model loads the executable instead of re-running XLA.
+
+Serialization is best-effort: any failure (old jax, cross-platform
+blob, corrupt file) degrades to a normal compile — never to an error.
+Entries are pickled, so the cache directory is trusted local state
+(unlike ``repro.deserialize``, which must be safe on untrusted bytes);
+point ``cache_dir``/``$REPRO_CACHE_DIR`` only at directories you own.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import tempfile
+from typing import Optional
+
+import jax
+
+_FORMAT_VERSION = 1
+
+
+def cache_key(*parts: str) -> str:
+    """Digest of the given parts plus everything environmental that
+    invalidates an executable (jax version, backend platform)."""
+    h = hashlib.sha256()
+    for p in (f"v{_FORMAT_VERSION}", jax.__version__, jax.default_backend(),
+              *parts):
+        h.update(p.encode())
+        h.update(b"\x00")
+    return h.hexdigest()
+
+
+def resolve_cache_dir(explicit: Optional[str]) -> Optional[str]:
+    """Explicit option wins; else ``$REPRO_CACHE_DIR``; else disabled."""
+    return explicit if explicit is not None else os.environ.get("REPRO_CACHE_DIR")
+
+
+class ExecutableCache:
+    """Pickle-per-entry directory cache of serialized XLA executables."""
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        self.hits = 0
+        self.misses = 0
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.xla")
+
+    def load(self, key: str):
+        """Return a loaded executable, or None on miss/failure."""
+        path = self._path(key)
+        if not os.path.exists(path):
+            self.misses += 1
+            return None
+        try:
+            from jax.experimental import serialize_executable as se
+            with open(path, "rb") as f:
+                payload = pickle.load(f)
+            exe = se.deserialize_and_load(*payload)
+            self.hits += 1
+            return exe
+        except Exception:
+            # Corrupt/stale entry: drop it and recompile.
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            self.misses += 1
+            return None
+
+    def store(self, key: str, compiled) -> bool:
+        """Serialize ``compiled`` under ``key``; atomic via rename."""
+        try:
+            from jax.experimental import serialize_executable as se
+            payload = se.serialize(compiled)
+            blob = pickle.dumps(payload)
+        except Exception:
+            return False
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "wb") as f:
+                f.write(blob)
+            os.replace(tmp, self._path(key))
+            return True
+        except OSError:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            return False
+
+    def stats(self) -> dict:
+        return {"dir": self.root, "hits": self.hits, "misses": self.misses}
+
+
+def open_cache(explicit_dir: Optional[str]) -> Optional[ExecutableCache]:
+    root = resolve_cache_dir(explicit_dir)
+    if not root:
+        return None
+    try:
+        return ExecutableCache(root)
+    except OSError:
+        return None

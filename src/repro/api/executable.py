@@ -1,0 +1,95 @@
+"""The Executable protocol — what ``repro.compile`` returns.
+
+Every target produces an object with the same surface, so benchmarks,
+examples, launch scripts and tests never care which backend they got:
+
+    exe(**inputs)        -> dict of named outputs
+    exe.compile_time     -> seconds spent compiling (None until first use
+                            for lazily-specializing targets)
+    exe.cost_summary()   -> static cost/report dict
+    exe.serialize()      -> self-contained bytes
+    deserialize(blob)    -> an equivalent Executable (recompiled, or
+                            loaded from the persistent executable cache)
+
+The serialized form is a small framed container: a magic line, a JSON
+meta line (kind + CompileOptions), and an ``.npz`` body holding the
+model itself — deliberately *source-level* (graph or params), with the
+machine-code level handled by the on-disk executable cache keyed from
+the same bytes, so a deserialized executable is correct on any backend
+and merely *fast* to bring up on the one that populated the cache.
+"""
+
+from __future__ import annotations
+
+import abc
+import io
+import json
+from typing import Any, Dict, Optional
+
+from .options import CompileOptions
+
+MAGIC = b"REPROEXE1"
+FORMAT = "repro-executable"
+VERSION = 1
+
+
+class Executable(abc.ABC):
+    """Abstract base for all compiled artifacts."""
+
+    options: CompileOptions
+    compile_time: Optional[float]
+
+    @abc.abstractmethod
+    def __call__(self, **inputs) -> Dict[str, Any]:
+        """Run inference; returns a dict of named output arrays."""
+
+    @abc.abstractmethod
+    def cost_summary(self) -> Dict[str, Any]:
+        """Static summary: nodes/params/memory plan/XLA cost terms."""
+
+    @abc.abstractmethod
+    def serialize(self) -> bytes:
+        """Self-contained bytes; invert with :func:`deserialize`."""
+
+
+# ---------------------------------------------------------------------------
+def pack(kind: str, options: CompileOptions, body: bytes,
+         extra: Optional[dict] = None) -> bytes:
+    meta = {"format": FORMAT, "version": VERSION, "kind": kind,
+            "options": options.to_dict(), **(extra or {})}
+    return MAGIC + b"\n" + json.dumps(meta, default=str).encode() + b"\n" + body
+
+
+def unpack(data: bytes):
+    try:
+        magic, meta_line, body = data.split(b"\n", 2)
+    except ValueError:
+        raise ValueError("not a repro executable container") from None
+    if magic != MAGIC:
+        raise ValueError(f"bad magic {magic!r}; expected {MAGIC!r}")
+    meta = json.loads(meta_line.decode())
+    if meta.get("format") != FORMAT:
+        raise ValueError(f"unknown container format {meta.get('format')!r}")
+    if meta.get("version", 0) > VERSION:
+        raise ValueError(f"container version {meta['version']} too new")
+    return meta, body
+
+
+def deserialize(data: bytes) -> Executable:
+    """Reconstruct an Executable from :meth:`Executable.serialize` bytes."""
+    meta, body = unpack(data)
+    options = CompileOptions.from_dict(meta["options"])
+    # Never honor a cache_dir embedded in (possibly untrusted) bytes:
+    # the cache pickle-loads from that directory.  None still falls
+    # back to the local $REPRO_CACHE_DIR.
+    options = options.replace(cache_dir=None)
+    kind = meta.get("kind")
+    if kind == "graph":
+        from ..core.keras_like import load_model
+        from . import compile as api_compile
+        graph = load_model(io.BytesIO(body))
+        return api_compile(graph, options)
+    if kind == "engine":
+        from .engine_adapter import deserialize_engine
+        return deserialize_engine(meta, body, options)
+    raise ValueError(f"unknown executable kind {kind!r}")

@@ -1,0 +1,89 @@
+"""CompileOptions — the one options surface for ``repro.compile``.
+
+A frozen dataclass replaces the old kwargs soup
+(``CompiledModel(graph, embed_weights=…, precision=…, use_pallas=…,
+passes=…)``).  Options are hashable, comparable and serializable, so
+they double as part of the persistent executable-cache key.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Optional, Tuple
+
+PRECISIONS = ("exact", "fast")
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileOptions:
+    """Every compile-time choice, in one place.
+
+    target:        lowering backend name (see ``repro.available_targets()``):
+                   ``"interpret"`` (SimpleNN oracle semantics), ``"jit"``
+                   (optimized jaxpr path), ``"pallas"`` (fused kernels),
+                   ``"engine"`` (framework-scale Model/Engine adapter).
+    precision:     ``"exact"`` or ``"fast"`` (paper §3.4 approximations).
+    embed_weights: close over weights as XLA constants (paper-faithful)
+                   vs. pass them as an argument (program reusable across
+                   checkpoints).
+    passes:        explicit pass pipeline; ``None`` = DEFAULT_PIPELINE.
+    batch_buckets: optional ascending batch sizes to specialize for; a
+                   call with batch B runs the smallest bucket ≥ B (input
+                   padded, output sliced).  Empty = specialize exactly.
+    donate_inputs: donate input buffers to the compiled program
+                   (in-place memory reuse; callers must not reuse the
+                   arrays they pass in).
+    cache_dir:     directory for the persistent executable cache.  None
+                   falls back to ``$REPRO_CACHE_DIR``; if that is unset
+                   the on-disk cache is disabled (in-process caching
+                   always applies).
+    """
+
+    target: str = "jit"
+    precision: str = "exact"
+    embed_weights: bool = True
+    passes: Optional[Tuple[str, ...]] = None
+    batch_buckets: Tuple[int, ...] = ()
+    donate_inputs: bool = False
+    cache_dir: Optional[str] = None
+
+    def __post_init__(self) -> None:
+        if self.precision not in PRECISIONS:
+            raise ValueError(
+                f"precision must be one of {PRECISIONS}, got {self.precision!r}"
+            )
+        if self.passes is not None:
+            object.__setattr__(self, "passes", tuple(self.passes))
+        buckets = tuple(sorted(int(b) for b in self.batch_buckets))
+        if any(b <= 0 for b in buckets):
+            raise ValueError(f"batch_buckets must be positive: {buckets}")
+        object.__setattr__(self, "batch_buckets", buckets)
+
+    # ------------------------------------------------------------------
+    def replace(self, **kw) -> "CompileOptions":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CompileOptions":
+        d = dict(d)
+        if d.get("passes") is not None:
+            d["passes"] = tuple(d["passes"])
+        d["batch_buckets"] = tuple(d.get("batch_buckets") or ())
+        return cls(**d)
+
+    def cache_token(self) -> str:
+        """Stable string of every field that affects generated code.
+
+        ``cache_dir`` is excluded (where the cache lives must not change
+        what is cached) and so is ``batch_buckets`` (the per-batch
+        program is identical however the caller buckets; the batch size
+        itself is a separate key component).
+        """
+        d = self.to_dict()
+        d.pop("cache_dir")
+        d.pop("batch_buckets")
+        return json.dumps(d, sort_keys=True, default=str)

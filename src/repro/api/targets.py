@@ -1,0 +1,282 @@
+"""Target registry + the graph-IR lowering targets.
+
+A *target* is a named factory ``(graph, options) -> Executable``.  The
+three built-ins mirror the paper's cast:
+
+    "interpret"  SimpleNN semantics — node-by-node eager oracle.
+    "jit"        the optimized path: pass pipeline + one specialized
+                 XLA program per batch size (CompiledNN's role).
+    "pallas"     same front end, dense nodes routed through the fused
+                 Pallas kernel (TPU; interpret-mode on CPU).
+
+New backends register with::
+
+    @register_target("my-backend")
+    def build(graph, options):
+        return MyExecutable(graph, options)
+"""
+
+from __future__ import annotations
+
+import functools
+import hashlib
+import io
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.graph import Graph
+from ..core.keras_like import save_model
+from ..core.lowering import execute_graph
+from ..core.passes import run_pipeline
+from ..core.simple import SimpleNN
+from .cache import cache_key, open_cache
+from .executable import Executable, pack
+from .options import CompileOptions
+
+TargetFactory = Callable[[Graph, CompileOptions], Executable]
+
+_TARGETS: Dict[str, TargetFactory] = {}
+
+
+def register_target(name: str) -> Callable[[TargetFactory], TargetFactory]:
+    """Decorator: register a factory under ``name`` (overwrites)."""
+
+    def deco(factory: TargetFactory) -> TargetFactory:
+        _TARGETS[name] = factory
+        return factory
+
+    return deco
+
+
+def get_target(name: str) -> TargetFactory:
+    try:
+        return _TARGETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown target {name!r}; available: {available_targets()}"
+        ) from None
+
+
+def available_targets() -> Tuple[str, ...]:
+    return tuple(sorted(_TARGETS))
+
+
+# ---------------------------------------------------------------------------
+class GraphExecutable(Executable):
+    """Shared surface for graph-IR executables (source kept for
+    serialization; subclasses own the actual lowering)."""
+
+    def __init__(self, graph: Graph, options: CompileOptions) -> None:
+        self.source = graph
+        self.options = options
+        self.compile_time: Optional[float] = None
+
+    def serialize(self) -> bytes:
+        buf = io.BytesIO()
+        save_model(self.source, buf)
+        return pack("graph", self.options, buf.getvalue())
+
+    def ensure_compiled(self, batch_size: int = 1) -> Callable:
+        """Callable taking inputs positionally in graph order, with any
+        per-batch specialization done up front.  Base implementation
+        (eager targets) just binds input names; JitExecutable overrides
+        it with the AOT-compiled program."""
+        input_names = list(self.source.inputs)
+        return lambda *args: self(**dict(zip(input_names, args)))
+
+    def cache_info(self) -> dict:
+        """Disk-cache counters; zeros for targets without one."""
+        return {"dir": None, "hits": 0, "misses": 0}
+
+    def _gather_inputs(self, inputs) -> List[jnp.ndarray]:
+        missing = [n for n in self.source.inputs if n not in inputs]
+        if missing:
+            raise ValueError(f"missing inputs {missing}; expected "
+                             f"{list(self.source.inputs)}")
+        args = []
+        for n, spec in self.source.inputs.items():
+            a = jnp.asarray(inputs[n])
+            if a.shape[1:] != spec.shape:
+                raise ValueError(
+                    f"input {n!r}: expected (batch,)+{spec.shape}, "
+                    f"got {a.shape}")
+            args.append(a)
+        return args
+
+
+@register_target("interpret")
+class InterpretExecutable(GraphExecutable):
+    """The oracle as an Executable: exact, unoptimized, eager."""
+
+    def __init__(self, graph: Graph, options: CompileOptions) -> None:
+        super().__init__(graph, options)
+        t0 = time.perf_counter()
+        self._nn = SimpleNN(graph)
+        self.compile_time = time.perf_counter() - t0
+
+    def __call__(self, **inputs):
+        args = self._gather_inputs(inputs)
+        return self._nn(**dict(zip(self.source.inputs, args)))
+
+    def cost_summary(self):
+        return {
+            "target": self.options.target,
+            "nodes": len(self.source.nodes),
+            "params": len(self.source.params),
+            "param_bytes": int(sum(v.nbytes
+                                   for v in self.source.params.values())),
+        }
+
+
+class JitExecutable(GraphExecutable):
+    """Pass pipeline + AOT-compiled XLA program per batch size, with the
+    persistent on-disk executable cache."""
+
+    def __init__(self, graph: Graph, options: CompileOptions,
+                 *, use_pallas: bool = False) -> None:
+        super().__init__(graph, options)
+        self.use_pallas = use_pallas
+        t0 = time.perf_counter()
+        self.graph, self.report = run_pipeline(graph, options.passes)
+        self._pass_time = time.perf_counter() - t0
+        self._fns: Dict[int, Callable] = {}
+        self._disk = open_cache(options.cache_dir)
+        self._xla_cost: Optional[dict] = None
+        self._weights_digest_memo: Optional[str] = None
+
+    # -- cache key -----------------------------------------------------
+    def _weights_digest(self) -> str:
+        if self._weights_digest_memo is None:
+            h = hashlib.sha256()
+            for k in sorted(self.graph.params):
+                v = np.ascontiguousarray(self.graph.params[k])
+                h.update(k.encode())
+                h.update(str(v.shape).encode())
+                h.update(v.tobytes())
+            self._weights_digest_memo = h.hexdigest()
+        return self._weights_digest_memo
+
+    def _key(self, batch_size: int) -> str:
+        weights = self._weights_digest() if self.options.embed_weights else ""
+        return cache_key(self.graph.structure_hash(), weights,
+                         self.options.cache_token(), f"batch={batch_size}")
+
+    # -- compilation ---------------------------------------------------
+    def ensure_compiled(self, batch_size: int = 1) -> Callable:
+        """Compile (or fetch) the program specialized to ``batch_size``;
+        returns a callable taking inputs positionally in graph order."""
+        if batch_size in self._fns:
+            return self._fns[batch_size]
+        t0 = time.perf_counter()
+        input_names = list(self.graph.inputs)
+        params = {k: jnp.asarray(v) for k, v in self.graph.params.items()}
+        lower_kw = dict(precision=self.options.precision,
+                        use_pallas=self.use_pallas)
+        in_specs = [
+            jax.ShapeDtypeStruct((batch_size,) + self.graph.inputs[n].shape,
+                                 self.graph.inputs[n].dtype)
+            for n in input_names
+        ]
+
+        if self.options.embed_weights:
+            def program(*args):
+                env = dict(zip(input_names, args))
+                return execute_graph(self.graph, env, params, **lower_kw)
+
+            donate = (tuple(range(len(input_names)))
+                      if self.options.donate_inputs else ())
+            specs = in_specs
+            wrap = lambda exe: exe
+        else:
+            def program(param_arg, *args):
+                env = dict(zip(input_names, args))
+                return execute_graph(self.graph, env, param_arg, **lower_kw)
+
+            donate = (tuple(range(1, len(input_names) + 1))
+                      if self.options.donate_inputs else ())
+            specs = [jax.eval_shape(lambda: params)] + in_specs
+            wrap = lambda exe: functools.partial(exe, params)
+
+        jitted = jax.jit(program, donate_argnums=donate)
+        key = self._key(batch_size)
+        exe = self._disk.load(key) if self._disk else None
+        if exe is None:
+            exe = jitted.lower(*specs).compile()
+            if self._disk:
+                self._disk.store(key, exe)
+        try:
+            cost = exe.cost_analysis()
+            self._xla_cost = cost[0] if isinstance(cost, list) else cost
+        except Exception:
+            pass
+        fn = wrap(exe)
+        self._fns[batch_size] = fn
+        # Total seconds spent compiling: pass pipeline once, plus every
+        # per-batch-size XLA compile so far.
+        base = (self.compile_time if self.compile_time is not None
+                else self._pass_time)
+        self.compile_time = base + (time.perf_counter() - t0)
+        return fn
+
+    # -- execution -----------------------------------------------------
+    def _pick_bucket(self, batch: int) -> int:
+        for b in self.options.batch_buckets:
+            if b >= batch:
+                return b
+        return batch
+
+    def __call__(self, **inputs):
+        args = self._gather_inputs(inputs)
+        batch = args[0].shape[0]
+        bucket = self._pick_bucket(batch)
+        fn = self.ensure_compiled(bucket)
+        if bucket != batch:
+            args = [
+                jnp.concatenate(
+                    [a, jnp.zeros((bucket - batch,) + a.shape[1:], a.dtype)])
+                for a in args
+            ]
+        out = fn(*args)
+        if bucket != batch:
+            out = {k: v[:batch] for k, v in out.items()}
+        # Passes may rename output tensors (e.g. a fused terminal
+        # activation); the public contract keys outputs by the SOURCE
+        # graph's names, identically across targets.
+        return {src: out[opt] for src, opt in
+                zip(self.source.outputs, self.graph.outputs)}
+
+    # -- introspection -------------------------------------------------
+    def cache_info(self) -> dict:
+        if self._disk is None:
+            return super().cache_info()
+        return self._disk.stats()
+
+    def cost_summary(self):
+        out = {
+            "target": self.options.target,
+            "nodes": len(self.graph.nodes),
+            "params": len(self.graph.params),
+            "param_bytes": int(sum(v.nbytes
+                                   for v in self.graph.params.values())),
+            "passes": self.report["passes"],
+            "memory_plan": self.report["memory_plan"],
+        }
+        if self._xla_cost:
+            out["xla"] = {k: self._xla_cost[k]
+                          for k in ("flops", "bytes accessed")
+                          if k in self._xla_cost}
+        return out
+
+
+@register_target("jit")
+def _build_jit(graph: Graph, options: CompileOptions) -> Executable:
+    return JitExecutable(graph, options, use_pallas=False)
+
+
+@register_target("pallas")
+def _build_pallas(graph: Graph, options: CompileOptions) -> Executable:
+    return JitExecutable(graph, options, use_pallas=True)

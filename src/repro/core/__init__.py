@@ -2,9 +2,13 @@
 
 Public API:
     Graph, ModelBuilder         — build/load models (front end, §3.1)
-    CompiledModel               — optimize + JIT-compile (§3.2–3.5)
     SimpleNN                    — exact oracle interpreter (§3.1)
     run_pipeline                — the pass pipeline, standalone
+    CompiledModel               — DEPRECATED shim; use ``repro.compile``
+                                  with ``repro.CompileOptions`` instead
+
+The compilation entry point lives in ``repro.api`` (``repro.compile``);
+the shared graph→JAX lowering is ``repro.core.lowering``.
 """
 
 from .graph import Graph, Node, TensorSpec

@@ -1,62 +1,45 @@
-"""CompiledModel — the JAX rendition of the paper's ``CompiledNN``.
+"""CompiledModel — DEPRECATED shim over ``repro.compile``.
 
-``CompiledModel(graph).compile(batch_size)`` runs the optimization
-pipeline (repro.core.passes) over the graph IR, then traces the
-*optimized* program once and hands it to ``jax.jit`` — the analogue of
-CompiledNN emitting machine code via AsmJit at model-load time.  After
-compilation, ``apply()`` calls the specialized program; nothing about
-the network structure is interpreted at call time (all Python-level
-graph walking happens at trace time and is baked into the jaxpr, just
-as CompiledNN bakes its graph walk into the instruction stream).
+The paper's ``CompiledNN::compile`` entry point now lives behind the
+unified API::
 
-Modes
------
-* ``embed_weights=True`` (paper-faithful, default): weights are closed
-  over as constants — XLA sees literal arrays and may constant-fold
-  through them.  Right choice for the paper's CNN scale.
-* ``embed_weights=False`` (framework mode): weights are a pytree
-  argument; the compiled program is reusable across checkpoints and the
-  cache key is the structure hash only.
-* ``precision='exact'|'fast'``: 'fast' swaps tanh/sigmoid/softmax/exp
-  for the paper's approximations (§3.4).
-* ``use_pallas``: route dense nodes through the fused-epilogue Pallas
-  kernel (TPU target; interpret-mode on CPU — correct but slow, so CPU
-  benchmarks default to the identical-semantics jnp path).
+    import repro
+    exe = repro.compile(graph, repro.CompileOptions(
+        target="jit", precision="exact", embed_weights=True))
 
-The compile cache and compile-time measurement mirror the paper's
-Table 1 "Compilation Time" row.
+This class survives one deprecation cycle so existing call sites keep
+working: it forwards every constructor kwarg into ``CompileOptions``,
+delegates to the ``"jit"``/``"pallas"`` targets, and re-exposes the old
+attributes (``graph``, ``report``, ``compile_time``).  A single
+``DeprecationWarning`` is emitted per process.
 """
 
 from __future__ import annotations
 
-import time
-from typing import Any, Callable, Dict, Optional, Tuple
+import warnings
+from typing import Callable, Dict, Optional, Tuple
 
-import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .graph import Graph, Node
-from .passes import run_pipeline
-from .simple import _activation, _lax_padding
-from ..kernels.fast_act import ref as fast_ref
-from ..kernels.fused_matmul.ops import fused_matmul
+from .graph import Graph
+
+_warned = False
 
 
-def _fast_activation(fn: str, x: jnp.ndarray, attrs: Dict) -> jnp.ndarray:
-    if fn == "tanh":
-        return fast_ref.cf_tanh(x)
-    if fn == "sigmoid":
-        return fast_ref.cf_sigmoid(x)
-    if fn == "softmax":
-        return fast_ref.fast_softmax(x, axis=attrs.get("axis", -1))
-    if fn == "elu":
-        return jnp.where(x >= 0, x, fast_ref.schraudolph_exp(x) - 1.0)
-    return _activation(fn, x, attrs)
+def _warn_once() -> None:
+    global _warned
+    if not _warned:
+        _warned = True
+        warnings.warn(
+            "CompiledModel is deprecated; use repro.compile(graph, "
+            "repro.CompileOptions(...)) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
 
 
 class CompiledModel:
-    """Compile a graph IR model into a specialized JAX program."""
+    """Deprecated: compile a graph IR model via the legacy surface."""
 
     def __init__(
         self,
@@ -67,192 +50,45 @@ class CompiledModel:
         use_pallas: bool = False,
         passes: Optional[Tuple[str, ...]] = None,
     ) -> None:
-        assert precision in ("exact", "fast")
+        _warn_once()
+        from ..api import CompileOptions, compile as api_compile
+
         self.source = graph
         self.embed_weights = embed_weights
         self.precision = precision
         self.use_pallas = use_pallas
-        t0 = time.perf_counter()
-        self.graph, self.report = run_pipeline(graph, passes)
-        self._pass_time = time.perf_counter() - t0
-        self._cache: Dict[Any, Callable] = {}
-        self.compile_time: Optional[float] = None
+        self._exe = api_compile(
+            graph,
+            CompileOptions(
+                target="pallas" if use_pallas else "jit",
+                precision=precision,
+                embed_weights=embed_weights,
+                passes=passes,
+            ),
+        )
 
-    # ------------------------------------------------------------------
+    # -- legacy attribute surface --------------------------------------
+    @property
+    def graph(self) -> Graph:
+        return self._exe.graph
+
+    @property
+    def report(self) -> Dict:
+        return self._exe.report
+
+    @property
+    def compile_time(self) -> Optional[float]:
+        return self._exe.compile_time
+
+    @property
+    def executable(self):
+        """The new-API executable this shim wraps."""
+        return self._exe
+
+    # -- legacy methods ------------------------------------------------
     def compile(self, batch_size: int = 1) -> Callable:
         """Lower + compile for a given batch size; cached thereafter."""
-        key = (batch_size, self.graph.structure_hash(), self.embed_weights,
-               self.precision, self.use_pallas)
-        if key in self._cache:
-            return self._cache[key]
-        t0 = time.perf_counter()
-
-        input_names = list(self.graph.inputs)
-        params = {k: jnp.asarray(v) for k, v in self.graph.params.items()}
-
-        if self.embed_weights:
-            def program(*args):
-                env = dict(zip(input_names, args))
-                return self._execute(env, params)
-
-            fn = jax.jit(program)
-        else:
-            def program(param_arg, *args):
-                env = dict(zip(input_names, args))
-                return self._execute(env, param_arg)
-
-            import functools
-            fn = functools.partial(jax.jit(program), params)
-
-        # Trigger actual XLA compilation now (the paper measures
-        # model-load + compile as one number).
-        specs = [
-            jnp.zeros((batch_size,) + self.graph.inputs[n].shape,
-                      self.graph.inputs[n].dtype)
-            for n in input_names
-        ]
-        jax.block_until_ready(fn(*specs))
-        self.compile_time = (time.perf_counter() - t0) + self._pass_time
-        self._cache[key] = fn
-        return fn
+        return self._exe.ensure_compiled(batch_size)
 
     def apply(self, **inputs: jnp.ndarray) -> Dict[str, jnp.ndarray]:
-        batch = next(iter(inputs.values())).shape[0]
-        fn = self.compile(batch)
-        args = [jnp.asarray(inputs[n]) for n in self.graph.inputs]
-        return fn(*args)
-
-    # ------------------------------------------------------------------
-    def _execute(self, env: Dict[str, jnp.ndarray], params) -> Dict[str, jnp.ndarray]:
-        """Trace the optimized graph.  Runs once, at jit-trace time."""
-        for node in self.graph.toposort():
-            env[node.output] = self._emit(node, env, params)
-        return {name: env[name] for name in self.graph.outputs}
-
-    def _emit(self, node: Node, env, params) -> jnp.ndarray:
-        op = node.op
-        ins = [env[t] for t in node.inputs]
-        act = (_fast_activation if self.precision == "fast" else _activation)
-
-        def epilogue(y):
-            if node.epilogue and node.epilogue != "linear":
-                y = act(node.epilogue, y, node.epilogue_attrs)
-            pa = node.epilogue_attrs.get("post_affine")
-            if pa:
-                s, o = params[pa[0]], params[pa[1]]
-                y = y * s + o
-            return y
-
-        if op == "constant":
-            batch = next(iter(env.values())).shape[0] if env else 1
-            v = params[node.params["value"]]
-            return jnp.broadcast_to(v, (batch,) + v.shape)
-
-        if op == "dense":
-            w = params[node.params["kernel"]]
-            b = params[node.params["bias"]] if "bias" in node.params else None
-            layout = node.attrs.get("kernel_layout", "io")
-            pa = node.epilogue_attrs.get("post_affine")
-            scale = params[pa[0]] if pa else None
-            offset = params[pa[1]] if pa else None
-            fn = node.epilogue if node.epilogue not in (None, "linear") else None
-            if fn == "softmax":
-                fn = None  # handled below (two-pass, not fusable in-kernel)
-            y = fused_matmul(
-                ins[0], w, b, scale, offset,
-                fn=fn,
-                fast=self.precision == "fast",
-                w_layout=layout,
-                use_pallas=self.use_pallas,
-                attrs=node.epilogue_attrs,
-            )
-            if "orig_cout" in node.attrs:
-                y = y[..., : node.attrs["orig_cout"]]
-            if node.epilogue == "softmax":
-                y = act("softmax", y, node.epilogue_attrs)
-            return y
-
-        if op == "conv2d":
-            k = params[node.params["kernel"]]
-            y = jax.lax.conv_general_dilated(
-                ins[0], k,
-                window_strides=node.attrs["strides"],
-                padding=_lax_padding(node.attrs["padding"]),
-                dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            )
-            if "bias" in node.params:
-                y = y + params[node.params["bias"]]
-            return epilogue(y)
-
-        if op == "depthwise_conv2d":
-            k = params[node.params["kernel"]]
-            kh, kw, c, mult = k.shape
-            y = jax.lax.conv_general_dilated(
-                ins[0], k.reshape(kh, kw, 1, c * mult),
-                window_strides=node.attrs["strides"],
-                padding=_lax_padding(node.attrs["padding"]),
-                dimension_numbers=("NHWC", "HWIO", "NHWC"),
-                feature_group_count=c,
-            )
-            if "bias" in node.params:
-                y = y + params[node.params["bias"]]
-            return epilogue(y)
-
-        if op == "batchnorm":
-            # Unfolded BN survives only when no adjacent foldable layer
-            # existed; emit the precomputed affine (scale/offset folded
-            # at compile time — cheaper than the 4-param formula).
-            gamma = params[node.params["gamma"]]
-            beta = params[node.params["beta"]]
-            mean = params[node.params["mean"]]
-            var = params[node.params["var"]]
-            eps = node.attrs["epsilon"]
-            s = gamma * jax.lax.rsqrt(var + eps)
-            o = beta - s * mean
-            return epilogue(ins[0] * s + o)
-
-        if op == "activation":
-            return epilogue(act(node.attrs["fn"], ins[0], node.attrs))
-
-        if op == "maxpool2d":
-            y = jax.lax.reduce_window(
-                ins[0], -jnp.inf, jax.lax.max,
-                (1,) + tuple(node.attrs["pool_size"]) + (1,),
-                (1,) + tuple(node.attrs["strides"]) + (1,),
-                node.attrs["padding"].upper(),
-            )
-            return epilogue(y)
-
-        if op == "avgpool2d":
-            window = (1,) + tuple(node.attrs["pool_size"]) + (1,)
-            strides = (1,) + tuple(node.attrs["strides"]) + (1,)
-            pad = node.attrs["padding"].upper()
-            s = jax.lax.reduce_window(ins[0], 0.0, jax.lax.add, window, strides, pad)
-            ones = jnp.ones_like(ins[0])
-            nrm = jax.lax.reduce_window(ones, 0.0, jax.lax.add, window, strides, pad)
-            return epilogue(s / nrm)
-
-        if op == "global_avg_pool":
-            return epilogue(jnp.mean(ins[0], axis=(1, 2)))
-
-        if op == "upsample2d":
-            f = node.attrs["factor"]
-            return epilogue(jnp.repeat(jnp.repeat(ins[0], f, axis=1), f, axis=2))
-
-        if op == "zero_pad2d":
-            (t, b), (l, r) = node.attrs["padding"]
-            return epilogue(jnp.pad(ins[0], ((0, 0), (t, b), (l, r), (0, 0))))
-
-        if op == "add":
-            return epilogue(ins[0] + ins[1])
-        if op == "mul":
-            return epilogue(ins[0] * ins[1])
-        if op == "concat":
-            return epilogue(jnp.concatenate(ins, axis=node.attrs["axis"] + 1))
-        if op == "reshape":
-            return epilogue(
-                ins[0].reshape((ins[0].shape[0],) + tuple(node.attrs["shape"]))
-            )
-        if op == "softmax":
-            return epilogue(act("softmax", ins[0], node.attrs))
-        raise NotImplementedError(op)
+        return self._exe(**inputs)

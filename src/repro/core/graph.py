@@ -276,10 +276,7 @@ class Graph:
             h, w, c = ins[0].shape
             ph, pw = node.attrs["pool_size"]
             sh, sw = node.attrs["strides"]
-            if node.attrs["padding"] == "same":
-                oh, ow = -(-h // sh), -(-w // sw)
-            else:
-                oh, ow = (h - ph) // sh + 1, (w - pw) // sw + 1
+            oh, ow = _conv_out_hw(h, w, ph, pw, sh, sw, node.attrs["padding"])
             return TensorSpec((oh, ow, c))
         if op == "global_avg_pool":
             return TensorSpec((ins[0].shape[-1],))

@@ -1,0 +1,191 @@
+"""Graph-IR → JAX lowering: one function per trace.
+
+This is the back end shared by every compiled target: it walks an
+(optimized) graph once, at ``jax.jit`` trace time, emitting jnp/lax ops
+— the analogue of CompiledNN walking its graph once to emit machine
+code.  Nothing here runs per inference call; the walk is baked into the
+jaxpr.
+
+``execute_graph`` is a pure function of ``(graph, env, params)`` plus
+static lowering choices (``precision``, ``use_pallas``), so both the
+legacy ``CompiledModel`` shim and the ``repro.api`` targets call it.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .graph import Graph, Node
+from .simple import _activation, _lax_padding, _pool_padding
+from ..kernels.fast_act import ref as fast_ref
+from ..kernels.fused_matmul.ops import fused_matmul
+
+
+def fast_activation(fn: str, x: jnp.ndarray, attrs: Dict) -> jnp.ndarray:
+    """The paper's §3.4 approximations; falls back to exact forms."""
+    if fn == "tanh":
+        return fast_ref.cf_tanh(x)
+    if fn == "sigmoid":
+        return fast_ref.cf_sigmoid(x)
+    if fn == "softmax":
+        return fast_ref.fast_softmax(x, axis=attrs.get("axis", -1))
+    if fn == "elu":
+        return jnp.where(x >= 0, x, fast_ref.schraudolph_exp(x) - 1.0)
+    return _activation(fn, x, attrs)
+
+
+def execute_graph(
+    graph: Graph,
+    env: Dict[str, jnp.ndarray],
+    params,
+    *,
+    precision: str = "exact",
+    use_pallas: bool = False,
+) -> Dict[str, jnp.ndarray]:
+    """Trace the graph.  ``env`` maps input names to (traced) arrays."""
+    for node in graph.toposort():
+        env[node.output] = emit_node(
+            node, env, params, precision=precision, use_pallas=use_pallas
+        )
+    return {name: env[name] for name in graph.outputs}
+
+
+def emit_node(
+    node: Node,
+    env: Dict[str, jnp.ndarray],
+    params,
+    *,
+    precision: str = "exact",
+    use_pallas: bool = False,
+) -> jnp.ndarray:
+    op = node.op
+    ins = [env[t] for t in node.inputs]
+    act = fast_activation if precision == "fast" else _activation
+
+    def epilogue(y):
+        if node.epilogue and node.epilogue != "linear":
+            y = act(node.epilogue, y, node.epilogue_attrs)
+        pa = node.epilogue_attrs.get("post_affine")
+        if pa:
+            s, o = params[pa[0]], params[pa[1]]
+            y = y * s + o
+        return y
+
+    if op == "constant":
+        batch = next(iter(env.values())).shape[0] if env else 1
+        v = params[node.params["value"]]
+        return jnp.broadcast_to(v, (batch,) + v.shape)
+
+    if op == "dense":
+        w = params[node.params["kernel"]]
+        b = params[node.params["bias"]] if "bias" in node.params else None
+        layout = node.attrs.get("kernel_layout", "io")
+        pa = node.epilogue_attrs.get("post_affine")
+        scale = params[pa[0]] if pa else None
+        offset = params[pa[1]] if pa else None
+        fn = node.epilogue if node.epilogue not in (None, "linear") else None
+        if fn == "softmax":
+            fn = None  # handled below (two-pass, not fusable in-kernel)
+        y = fused_matmul(
+            ins[0], w, b, scale, offset,
+            fn=fn,
+            fast=precision == "fast",
+            w_layout=layout,
+            use_pallas=use_pallas,
+            attrs=node.epilogue_attrs,
+        )
+        if "orig_cout" in node.attrs:
+            y = y[..., : node.attrs["orig_cout"]]
+        if node.epilogue == "softmax":
+            y = act("softmax", y, node.epilogue_attrs)
+        return y
+
+    if op == "conv2d":
+        k = params[node.params["kernel"]]
+        y = jax.lax.conv_general_dilated(
+            ins[0], k,
+            window_strides=node.attrs["strides"],
+            padding=_lax_padding(node.attrs["padding"]),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        if "bias" in node.params:
+            y = y + params[node.params["bias"]]
+        return epilogue(y)
+
+    if op == "depthwise_conv2d":
+        k = params[node.params["kernel"]]
+        kh, kw, c, mult = k.shape
+        y = jax.lax.conv_general_dilated(
+            ins[0], k.reshape(kh, kw, 1, c * mult),
+            window_strides=node.attrs["strides"],
+            padding=_lax_padding(node.attrs["padding"]),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=c,
+        )
+        if "bias" in node.params:
+            y = y + params[node.params["bias"]]
+        return epilogue(y)
+
+    if op == "batchnorm":
+        # Unfolded BN survives only when no adjacent foldable layer
+        # existed; emit the precomputed affine (scale/offset folded
+        # at compile time — cheaper than the 4-param formula).
+        gamma = params[node.params["gamma"]]
+        beta = params[node.params["beta"]]
+        mean = params[node.params["mean"]]
+        var = params[node.params["var"]]
+        eps = node.attrs["epsilon"]
+        s = gamma * jax.lax.rsqrt(var + eps)
+        o = beta - s * mean
+        return epilogue(ins[0] * s + o)
+
+    if op == "activation":
+        return epilogue(act(node.attrs["fn"], ins[0], node.attrs))
+
+    if op == "maxpool2d":
+        y = jax.lax.reduce_window(
+            ins[0], -jnp.inf, jax.lax.max,
+            (1,) + tuple(node.attrs["pool_size"]) + (1,),
+            (1,) + tuple(node.attrs["strides"]) + (1,),
+            _pool_padding(node.attrs["padding"]),
+        )
+        return epilogue(y)
+
+    if op == "avgpool2d":
+        window = (1,) + tuple(node.attrs["pool_size"]) + (1,)
+        strides = (1,) + tuple(node.attrs["strides"]) + (1,)
+        pad = _pool_padding(node.attrs["padding"])
+        s = jax.lax.reduce_window(ins[0], 0.0, jax.lax.add, window, strides, pad)
+        ones = jnp.ones_like(ins[0])
+        nrm = jax.lax.reduce_window(ones, 0.0, jax.lax.add, window, strides, pad)
+        return epilogue(s / nrm)
+
+    if op == "global_avg_pool":
+        return epilogue(jnp.mean(ins[0], axis=(1, 2)))
+
+    if op == "upsample2d":
+        f = node.attrs["factor"]
+        return epilogue(jnp.repeat(jnp.repeat(ins[0], f, axis=1), f, axis=2))
+
+    if op == "zero_pad2d":
+        (t, b), (l, r) = node.attrs["padding"]
+        return epilogue(jnp.pad(ins[0], ((0, 0), (t, b), (l, r), (0, 0))))
+
+    if op == "add":
+        return epilogue(ins[0] + ins[1])
+    if op == "mul":
+        return epilogue(ins[0] * ins[1])
+    if op == "concat":
+        return epilogue(jnp.concatenate(ins, axis=node.attrs["axis"] + 1))
+    if op == "reshape":
+        return epilogue(
+            ins[0].reshape((ins[0].shape[0],) + tuple(node.attrs["shape"]))
+        )
+    if op == "flatten":
+        return epilogue(ins[0].reshape(ins[0].shape[0], -1))
+    if op == "softmax":
+        return epilogue(act("softmax", ins[0], node.attrs))
+    raise NotImplementedError(op)

@@ -28,6 +28,15 @@ def _lax_padding(padding):
     return [(t, b), (l, r)]
 
 
+def _pool_padding(padding):
+    """Padding for ``reduce_window`` over NHWC: unlike conv, explicit
+    padding must name all four dims, not just the spatial pair."""
+    p = _lax_padding(padding)
+    if isinstance(p, str):
+        return p
+    return [(0, 0), *p, (0, 0)]
+
+
 def _activation(fn: str, x: jnp.ndarray, attrs: Dict) -> jnp.ndarray:
     if fn == "linear":
         return x
@@ -143,13 +152,13 @@ class SimpleNN:
                 jax.lax.max,
                 (1,) + tuple(node.attrs["pool_size"]) + (1,),
                 (1,) + tuple(node.attrs["strides"]) + (1,),
-                node.attrs["padding"].upper(),
+                _pool_padding(node.attrs["padding"]),
             )
         if op == "avgpool2d":
             ones = jnp.ones_like(ins[0])
             window = (1,) + tuple(node.attrs["pool_size"]) + (1,)
             strides = (1,) + tuple(node.attrs["strides"]) + (1,)
-            pad = node.attrs["padding"].upper()
+            pad = _pool_padding(node.attrs["padding"])
             s = jax.lax.reduce_window(ins[0], 0.0, jax.lax.add, window, strides, pad)
             n = jax.lax.reduce_window(ones, 0.0, jax.lax.add, window, strides, pad)
             return s / n

@@ -27,18 +27,16 @@ def main(argv=None) -> int:
     ap.add_argument("--no-fold", action="store_true")
     args = ap.parse_args(argv)
 
-    import jax
+    import repro
     from repro.configs import get_config
-    from repro.inference import Engine, Request
-    from repro.models import get_model
+    from repro.inference import Request
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    model = get_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
 
     t0 = time.perf_counter()
-    eng = Engine(model, params, slots=args.slots, max_len=args.max_len,
-                 fold=not args.no_fold)
+    exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
+    eng = exe.serve(slots=args.slots, max_len=args.max_len,
+                    fold=not args.no_fold)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.integers(4, 17))

@@ -1,0 +1,22 @@
+"""Fallback when ``hypothesis`` is not installed: property-based tests
+are skipped (everything else in the module still runs).  Mirrors just
+enough of the decorator/strategy surface used in this suite."""
+
+import pytest
+
+
+def given(*_a, **_k):
+    return lambda fn: pytest.mark.skip(
+        reason="hypothesis not installed")(fn)
+
+
+def settings(*_a, **_k):
+    return lambda fn: fn
+
+
+class _Strategies:
+    def __getattr__(self, name):
+        return lambda *a, **k: None
+
+
+st = _Strategies()

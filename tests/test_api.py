@@ -1,0 +1,309 @@
+"""The unified ``repro.compile`` API: golden equivalence between the
+"interpret" and "jit" targets for every op the builder emits, executable
+serialization round-trips, the persistent on-disk executable cache, the
+target registry, and the legacy ``CompiledModel`` deprecation shim."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro.api import CompileOptions, JitExecutable, register_target
+from repro.core import ModelBuilder
+
+
+# ---------------------------------------------------------------------------
+# Golden per-op equivalence: interpret vs jit (satellite: includes the
+# previously-broken flatten op and explicit-padding pooling).
+# ---------------------------------------------------------------------------
+OP_CASES = {
+    "conv2d_same": lambda mb, x: mb.conv2d(x, 4, (3, 3)),
+    "conv2d_valid_strided": lambda mb, x: mb.conv2d(
+        x, 4, (3, 3), strides=(2, 2), padding="valid"),
+    "conv2d_relu": lambda mb, x: mb.conv2d(x, 4, (3, 3), activation="relu"),
+    "depthwise_conv2d": lambda mb, x: mb.depthwise_conv2d(x, (3, 3), mult=2),
+    "dense": lambda mb, x: mb.dense(mb.global_avg_pool(x), 5),
+    "dense_tanh": lambda mb, x: mb.dense(mb.global_avg_pool(x), 5,
+                                         activation="tanh"),
+    "batchnorm": lambda mb, x: mb.batchnorm(x),
+    "act_relu6": lambda mb, x: mb.activation(x, "relu6"),
+    "act_leaky_relu": lambda mb, x: mb.activation(x, "leaky_relu"),
+    "act_sigmoid": lambda mb, x: mb.activation(x, "sigmoid"),
+    "act_elu": lambda mb, x: mb.activation(x, "elu"),
+    "act_hard_sigmoid": lambda mb, x: mb.activation(x, "hard_sigmoid"),
+    "maxpool_valid": lambda mb, x: mb.maxpool(x),
+    "maxpool_same": lambda mb, x: mb.maxpool(x, (3, 3), strides=(2, 2),
+                                             padding="same"),
+    "maxpool_explicit_pad": lambda mb, x: mb.maxpool(
+        x, padding=((1, 0), (0, 1))),
+    "avgpool_valid": lambda mb, x: mb.avgpool(x),
+    "avgpool_explicit_pad": lambda mb, x: mb.avgpool(
+        x, padding=((1, 1), (1, 1))),
+    "global_avg_pool": lambda mb, x: mb.global_avg_pool(x),
+    "upsample2d": lambda mb, x: mb.upsample(x),
+    "zero_pad2d": lambda mb, x: mb.zero_pad(x, ((2, 0), (1, 1))),
+    "add": lambda mb, x: mb.add(mb.conv2d(x, 4, (1, 1)),
+                                mb.conv2d(x, 4, (1, 1))),
+    "concat": lambda mb, x: mb.concat([mb.conv2d(x, 3, (1, 1)),
+                                       mb.conv2d(x, 2, (1, 1))]),
+    "flatten": lambda mb, x: mb.flatten(x),
+    "flatten_dense": lambda mb, x: mb.dense(mb.flatten(x), 4),
+    "softmax": lambda mb, x: mb.softmax(mb.dense(mb.global_avg_pool(x), 5)),
+}
+
+
+def _build(case):
+    mb = ModelBuilder().seed(11)
+    x = mb.input((6, 6, 3))
+    out = OP_CASES[case](mb, x)
+    return mb.build([out]), out
+
+
+@pytest.mark.parametrize("embed", [True, False],
+                         ids=["embed", "framework"])
+@pytest.mark.parametrize("case", sorted(OP_CASES))
+def test_interpret_jit_golden_equivalence(case, embed, rng):
+    g, out = _build(case)
+    x = rng.standard_normal((2, 6, 6, 3)).astype(np.float32)
+    want = np.asarray(
+        repro.compile(g, CompileOptions(target="interpret"))(input=x)[out])
+    got = np.asarray(
+        repro.compile(g, CompileOptions(target="jit",
+                                        embed_weights=embed))(input=x)[out])
+    np.testing.assert_allclose(want, got, rtol=1e-5, atol=1e-5)
+
+
+def test_flatten_compiles_without_canonicalize(rng):
+    """The 'jit' target must lower flatten directly (the legacy back end
+    raised NotImplementedError unless canonicalize rewrote it away)."""
+    g, out = _build("flatten")
+    x = rng.standard_normal((3, 6, 6, 3)).astype(np.float32)
+    exe = repro.compile(g, CompileOptions(passes=()))
+    got = np.asarray(exe(input=x)[out])
+    np.testing.assert_allclose(got, x.reshape(3, -1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Executable protocol
+# ---------------------------------------------------------------------------
+def _cnn():
+    mb = ModelBuilder().seed(3)
+    x = mb.input((8, 8, 3))
+    h = mb.conv2d(x, 8, (3, 3), activation="relu")
+    h = mb.batchnorm(h)
+    h = mb.maxpool(h)
+    h = mb.global_avg_pool(h)
+    h = mb.dense(h, 4)
+    out = mb.softmax(h)
+    return mb.build([out]), out
+
+
+@pytest.mark.parametrize("target", ["interpret", "jit"])
+def test_serialize_deserialize_roundtrip(target, rng):
+    g, out = _cnn()
+    x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+    exe = repro.compile(g, CompileOptions(target=target))
+    blob = exe.serialize()
+    exe2 = repro.deserialize(blob)
+    assert exe2.options == exe.options
+    np.testing.assert_array_equal(np.asarray(exe(input=x)[out]),
+                                  np.asarray(exe2(input=x)[out]))
+
+
+def test_deserialize_rejects_garbage():
+    with pytest.raises(ValueError):
+        repro.deserialize(b"not an executable")
+
+
+def test_deserialize_ignores_embedded_cache_dir(tmp_path):
+    """A cache_dir carried inside serialized bytes must not be honored
+    (the cache pickle-loads from that directory)."""
+    g, _ = _cnn()
+    exe = repro.compile(g, CompileOptions(cache_dir=str(tmp_path)))
+    exe2 = repro.deserialize(exe.serialize())
+    assert exe2.options.cache_dir is None
+
+
+def test_executable_surface(rng):
+    g, out = _cnn()
+    x = rng.standard_normal((1, 8, 8, 3)).astype(np.float32)
+    exe = repro.compile(g, CompileOptions(target="jit"))
+    exe(input=x)
+    assert exe.compile_time is not None and exe.compile_time > 0
+    cost = exe.cost_summary()
+    assert cost["target"] == "jit"
+    assert cost["memory_plan"]["arena_bytes"] > 0
+    assert any(p["pass"] == "fold_batchnorm" for p in cost["passes"])
+    with pytest.raises(ValueError, match="missing inputs"):
+        exe(wrong_name=x)
+
+
+def test_batch_buckets_pad_and_slice(rng):
+    g, out = _cnn()
+    exe = repro.compile(g, CompileOptions(batch_buckets=(4,)))
+    ref = repro.compile(g, CompileOptions(target="interpret"))
+    for batch in (1, 3, 4):
+        x = rng.standard_normal((batch, 8, 8, 3)).astype(np.float32)
+        got = np.asarray(exe(input=x)[out])
+        assert got.shape[0] == batch
+        np.testing.assert_allclose(
+            got, np.asarray(ref(input=x)[out]), rtol=2e-5, atol=1e-6)
+    # every call ran the single bucket-4 specialization
+    assert list(exe._fns) == [4]
+    x = rng.standard_normal((6, 8, 8, 3)).astype(np.float32)  # > bucket
+    assert np.asarray(exe(input=x)[out]).shape[0] == 6
+
+
+def test_options_validation():
+    with pytest.raises(ValueError):
+        CompileOptions(precision="approximate")
+    with pytest.raises(ValueError):
+        CompileOptions(batch_buckets=(0,))
+    opts = CompileOptions(passes=["canonicalize"], batch_buckets=[4, 2])
+    assert opts.passes == ("canonicalize",)
+    assert opts.batch_buckets == (2, 4)
+    # cache_dir and batch_buckets don't change generated code, so they
+    # must not fragment the cross-process executable cache
+    assert opts.cache_token() == opts.replace(cache_dir="/tmp/x").cache_token()
+    assert opts.cache_token() == opts.replace(batch_buckets=()).cache_token()
+    assert opts.cache_token() != opts.replace(precision="fast").cache_token()
+
+
+# ---------------------------------------------------------------------------
+# Target registry
+# ---------------------------------------------------------------------------
+def test_unknown_target_raises():
+    g, _ = _cnn()
+    with pytest.raises(KeyError, match="unknown target"):
+        repro.compile(g, CompileOptions(target="tpu-asm"))
+
+
+def test_register_custom_target(rng):
+    calls = []
+
+    @register_target("test-echo")
+    def build(graph, options):
+        calls.append(options)
+        return repro.api.get_target("jit")(graph, options.replace(target="jit"))
+
+    try:
+        g, out = _cnn()
+        x = rng.standard_normal((1, 8, 8, 3)).astype(np.float32)
+        exe = repro.compile(g, CompileOptions(target="test-echo"))
+        assert calls and calls[0].target == "test-echo"
+        assert "test-echo" in repro.available_targets()
+        assert np.asarray(exe(input=x)[out]).shape == (1, 4)
+    finally:
+        from repro.api import targets
+        targets._TARGETS.pop("test-echo", None)
+
+
+def test_graph_rejects_engine_target():
+    g, _ = _cnn()
+    with pytest.raises(TypeError):
+        repro.compile(g, CompileOptions(target="engine"))
+
+
+def test_config_requires_explicit_engine_target():
+    """Non-graph models must name target='engine' — no silent rerouting
+    of an explicitly requested graph target."""
+    class FakeCfg:
+        family = "dense"
+        name = "fake"
+
+    with pytest.raises(TypeError, match="engine"):
+        repro.compile(FakeCfg(), CompileOptions(target="jit"))
+
+
+def test_graph_targets_share_positional_surface(rng):
+    """ensure_compiled/cache_info exist on every graph target, so
+    benchmarks can time any backend uniformly."""
+    g, out = _cnn()
+    x = rng.standard_normal((1, 8, 8, 3)).astype(np.float32)
+    want = None
+    for target in ("interpret", "jit"):
+        exe = repro.compile(g, CompileOptions(target=target))
+        fn = exe.ensure_compiled(batch_size=1)
+        got = np.asarray(fn(x)[out])
+        assert exe.cache_info()["hits"] == 0
+        if want is None:
+            want = got
+        else:
+            np.testing.assert_allclose(want, got, rtol=2e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Persistent executable cache
+# ---------------------------------------------------------------------------
+def test_disk_cache_second_compile_hits(tmp_path, rng):
+    g, out = _cnn()
+    x = rng.standard_normal((1, 8, 8, 3)).astype(np.float32)
+    opts = CompileOptions(cache_dir=str(tmp_path))
+
+    e1 = repro.compile(g, opts)
+    want = np.asarray(e1(input=x)[out])
+    assert e1.cache_info()["misses"] == 1 and e1.cache_info()["hits"] == 0
+
+    e2 = repro.compile(g, opts)          # fresh executable, same process
+    got = np.asarray(e2(input=x)[out])
+    assert e2.cache_info()["hits"] == 1 and e2.cache_info()["misses"] == 0
+    np.testing.assert_array_equal(want, got)
+
+
+def test_disk_cache_key_sensitive_to_options_and_weights(tmp_path, rng):
+    g, out = _cnn()
+    x = rng.standard_normal((1, 8, 8, 3)).astype(np.float32)
+    e1 = repro.compile(g, CompileOptions(cache_dir=str(tmp_path)))
+    e1(input=x)
+    # different precision -> different key -> miss
+    e2 = repro.compile(g, CompileOptions(cache_dir=str(tmp_path),
+                                         precision="fast"))
+    e2(input=x)
+    assert e2.cache_info()["misses"] == 1
+    # different weights (embedded) -> different key -> miss
+    g2, _ = _cnn()
+    k = sorted(g2.params)[0]
+    g2.params[k] = g2.params[k] + 1.0
+    e3 = repro.compile(g2, CompileOptions(cache_dir=str(tmp_path)))
+    e3(input=x)
+    assert e3.cache_info()["misses"] == 1
+
+
+def test_corrupt_cache_entry_degrades_to_compile(tmp_path, rng):
+    g, out = _cnn()
+    x = rng.standard_normal((1, 8, 8, 3)).astype(np.float32)
+    opts = CompileOptions(cache_dir=str(tmp_path))
+    e1 = repro.compile(g, opts)
+    want = np.asarray(e1(input=x)[out])
+    for f in tmp_path.glob("*.xla"):
+        f.write_bytes(b"corrupt")
+    e2 = repro.compile(g, opts)
+    got = np.asarray(e2(input=x)[out])
+    assert e2.cache_info()["misses"] == 1
+    np.testing.assert_array_equal(want, got)
+
+
+# ---------------------------------------------------------------------------
+# Legacy shim
+# ---------------------------------------------------------------------------
+def test_compiled_model_deprecation_warns_once(rng):
+    import repro.core.compiler as legacy
+    g, out = _cnn()
+    legacy._warned = False
+    with pytest.warns(DeprecationWarning, match="repro.compile"):
+        cm = legacy.CompiledModel(g)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        legacy.CompiledModel(g, precision="fast")
+    assert not any(issubclass(w.category, DeprecationWarning)
+                   for w in caught)
+    # the shim still works end to end and exposes the old surface
+    x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+    want = np.asarray(
+        repro.compile(g, CompileOptions(target="interpret"))(input=x)[out])
+    np.testing.assert_allclose(np.asarray(cm.apply(input=x)[out]), want,
+                               rtol=2e-5, atol=1e-6)
+    assert cm.compile_time > 0
+    assert cm.report["memory_plan"]["arena_bytes"] > 0
+    assert isinstance(cm.executable, JitExecutable)

@@ -3,7 +3,11 @@ memory-plan invariants (property-based)."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # container lacks hypothesis: skip only the
+    from _hypothesis_stub import given, settings, st  # property tests
 
 import jax.numpy as jnp
 
