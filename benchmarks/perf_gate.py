@@ -1,0 +1,71 @@
+"""CI perf-trajectory gate: compare a fresh BENCH_*.json against the
+checked-in baseline and fail on regression.
+
+    PYTHONPATH=src python -m benchmarks.perf_gate BENCH_pr.json \
+        benchmarks/artifacts/baseline.json --max-regression 0.25
+
+The gated metric is the compiled-vs-interpreted **speedup ratio**, not
+absolute milliseconds: both rows of the ratio run on the same machine
+in the same process, so it transfers between the laptop that seeded the
+baseline and whatever CI runner executes the gate, while a regression
+in the compiled path (a pass stops firing, a lowering falls off the
+jit path) still shows up directly.  Numerical correctness is gated too:
+``max_abs_err`` must stay within the oracle tolerance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+ERR_CEILING = 1e-4     # same oracle tolerance the smoke script enforces
+
+
+def gate(current: dict, baseline: dict, max_regression: float) -> list:
+    failures = []
+    for name, base in baseline["rows"].items():
+        cur = current["rows"].get(name)
+        if cur is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        floor = base["speedup"] * (1.0 - max_regression)
+        verdict = "OK" if cur["speedup"] >= floor else "REGRESSION"
+        print(f"[gate] {name:<12} speedup {cur['speedup']:7.1f}x "
+              f"(baseline {base['speedup']:7.1f}x, floor {floor:7.1f}x) "
+              f"err {cur['max_abs_err']:.2e}  {verdict}")
+        if cur["speedup"] < floor:
+            failures.append(
+                f"{name}: speedup {cur['speedup']:.1f}x fell more than "
+                f"{max_regression:.0%} below baseline {base['speedup']:.1f}x")
+        if cur["max_abs_err"] > ERR_CEILING:
+            failures.append(
+                f"{name}: max_abs_err {cur['max_abs_err']:.2e} exceeds "
+                f"the {ERR_CEILING:.0e} oracle ceiling")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="fresh BENCH_*.json from this run")
+    ap.add_argument("baseline", help="checked-in baseline.json")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="allowed fractional speedup drop (default 0.25)")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = gate(current, baseline, args.max_regression)
+    if failures:
+        for msg in failures:
+            print(f"[gate] FAIL: {msg}", file=sys.stderr)
+        return 1
+    print("[gate] OK — perf trajectory holds")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -10,8 +10,11 @@ specialized XLA program with every pass applied.  Both rows go through
 
 from __future__ import annotations
 
+import argparse
+import json
+import platform
 import time
-from typing import Dict
+from typing import Dict, Optional, Sequence
 
 import numpy as np
 
@@ -23,18 +26,33 @@ from .table1_models import SUITE
 
 
 def _time_call(fn, *args, reps=20, warmup=3) -> float:
+    """Min of per-rep wall times: robust to the scheduler hiccups and
+    GC pauses that dominate sub-millisecond means on shared CI runners
+    (the perf gate depends on this estimator being stable)."""
     for _ in range(warmup):
         jax.block_until_ready(fn(*args))
-    t0 = time.perf_counter()
+    times = []
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps
+        times.append(time.perf_counter() - t0)
+    return float(np.min(times))
 
 
-def run(reps: int = 20) -> Dict[str, Dict[str, float]]:
+def run(reps: int = 20,
+        configs: Optional[Sequence[str]] = None
+        ) -> Dict[str, Dict[str, float]]:
+    if configs:
+        unknown = sorted(set(configs) - set(SUITE))
+        if unknown:
+            raise SystemExit(f"unknown configs {unknown}; "
+                             f"choose from {sorted(SUITE)}")
+        suite = {n: SUITE[n] for n in configs}
+    else:
+        suite = SUITE
     rng = np.random.default_rng(0)
     rows: Dict[str, Dict[str, float]] = {}
-    for name, build in SUITE.items():
+    for name, build in suite.items():
         g = build()
         in_name = next(iter(g.inputs))
         out_name = g.outputs[0]
@@ -68,8 +86,17 @@ def run(reps: int = 20) -> Dict[str, Dict[str, float]]:
     return rows
 
 
-def main() -> None:
-    rows = run()
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--configs", nargs="*", metavar="NAME",
+                    help=f"subset of {sorted(SUITE)} (default: all)")
+    ap.add_argument("--reps", type=int, default=20)
+    ap.add_argument("--json", metavar="PATH",
+                    help="also write rows + environment as a BENCH_*.json "
+                         "artifact (the CI perf-trajectory format)")
+    args = ap.parse_args(argv)
+
+    rows = run(reps=args.reps, configs=args.configs)
     hdr = f"{'model':<12} {'interp ms':>10} {'compiled ms':>12} " \
           f"{'speedup':>8} {'compile ms':>11} {'max err':>9}"
     print(hdr)
@@ -78,6 +105,20 @@ def main() -> None:
         print(f"{name:<12} {r['interpreted_ms']:>10.3f} "
               f"{r['compiled_ms']:>12.3f} {r['speedup']:>8.1f} "
               f"{r['compile_time_ms']:>11.1f} {r['max_abs_err']:>9.2e}")
+    if args.json:
+        doc = {
+            "bench": "table1",
+            "rows": rows,
+            "env": {
+                "jax": jax.__version__,
+                "backend": jax.default_backend(),
+                "python": platform.python_version(),
+                "machine": platform.machine(),
+            },
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+        print(f"[table1] wrote {args.json}")
 
 
 if __name__ == "__main__":

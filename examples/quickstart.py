@@ -57,18 +57,18 @@ def cnn_flow():
 def llm_flow():
     print("== LLM flow (the same funnel at framework scale) ==")
     from repro.configs import get_config
-    from repro.inference import Request
+    from repro.serve import Request
 
     cfg = get_config("qwen2.5-14b", smoke=True)
     t0 = time.perf_counter()
     exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
-    eng = exe.serve(slots=2, max_len=64)
-    eng.submit(Request(uid=0, prompt=np.arange(8) % cfg.vocab,
-                       max_new_tokens=12))
-    out = eng.run()[0]
+    sched = repro.serve(exe, repro.SchedulerOptions(slots=2, max_len=64))
+    sched.submit(Request(uid=0, prompt=np.arange(8) % cfg.vocab,
+                         max_new_tokens=12))
+    out = sched.run()[0]
     print(f"  {len(out.tokens)} tokens in "
           f"{time.perf_counter() - t0:.1f}s (incl. compile); "
-          f"norm folds applied: {eng.fold_report['folds']}")
+          f"norm folds applied: {sched.fold_report['folds']}")
     print(f"  tokens: {out.tokens}")
     print(f"  cost: {exe.cost_summary()}")
 

@@ -10,7 +10,7 @@ import numpy as np
 
 import repro
 from repro.configs import get_config
-from repro.inference import Request
+from repro.serve import Request
 
 
 def main():
@@ -18,34 +18,38 @@ def main():
 
     t0 = time.perf_counter()
     exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
-    eng = exe.serve(slots=4, max_len=96)
-    print(f"engine compiled in {time.perf_counter() - t0:.1f}s "
-          f"(folds={eng.fold_report['folds']})")
+    sched = repro.serve(exe, repro.SchedulerOptions(slots=4, max_len=96))
+    print(f"scheduler compiled in {time.perf_counter() - t0:.1f}s "
+          f"(folds={sched.fold_report['folds']})")
 
     rng = np.random.default_rng(1)
     # burst 1
     for i in range(6):
-        eng.submit(Request(uid=i,
-                           prompt=rng.integers(0, cfg.vocab,
-                                               int(rng.integers(4, 20))),
-                           max_new_tokens=int(rng.integers(8, 20)),
-                           temperature=0.8 if i % 2 else 0.0))
-    # drain some, then burst 2 arrives mid-flight
+        sched.submit(Request(uid=i,
+                             prompt=rng.integers(0, cfg.vocab,
+                                                 int(rng.integers(4, 20))),
+                             max_new_tokens=int(rng.integers(8, 20)),
+                             temperature=0.8 if i % 2 else 0.0))
+    # drain some, then burst 2 arrives mid-flight — the scheduler
+    # rebatches every decode step, so the new burst fills freed slots
     for _ in range(10):
-        eng.step()
+        sched.step()
+    for c in sched.pop_completions():
+        print(f"  early finish: uid={c.uid} ({c.finish_reason})")
     for i in range(6, 10):
-        eng.submit(Request(uid=i,
-                           prompt=rng.integers(0, cfg.vocab, 8),
-                           max_new_tokens=10))
-    t0 = time.perf_counter()
-    done = eng.run()
-    dt = time.perf_counter() - t0
-    toks = sum(len(c.tokens) for c in done)
-    print(f"{len(done)} completions / {toks} tokens "
-          f"({toks / dt:.1f} tok/s steady-state)")
+        sched.submit(Request(uid=i,
+                             prompt=rng.integers(0, cfg.vocab, 8),
+                             max_new_tokens=10))
+    done = sched.run()
+    s = sched.summary()
+    print(f"{s['completed']} completions / {s['total_new_tokens']} tokens "
+          f"({(s['tokens_per_s'] or 0):.1f} tok/s, "
+          f"occupancy {(s['mean_batch_occupancy'] or 0):.2f}/4, "
+          f"peak queue {s['peak_queue_depth']})")
     for c in sorted(done, key=lambda c: c.uid):
+        m = sched.request_metrics[c.uid]
         print(f"  uid={c.uid:<2} n={len(c.tokens):<3} "
-              f"first={c.tokens[:6]}")
+              f"ttft={(m.ttft or 0) * 1e3:6.0f}ms first={c.tokens[:6]}")
 
 
 if __name__ == "__main__":

@@ -18,16 +18,24 @@ before jax initializes.
 _API_NAMES = (
     "CompileOptions",
     "Executable",
+    "SchedulerOptions",
     "available_targets",
     "compile",
     "deserialize",
     "register_target",
+    "serve",
 )
 
 __all__ = list(_API_NAMES)
 
 
 def __getattr__(name):
+    if name == "serve":
+        # the serve subpackage is a callable module: repro.serve(exe, …)
+        # and repro.serve.Scheduler resolve to the same object however
+        # the import happens (importing it also binds the attribute)
+        import importlib
+        return importlib.import_module(".serve", __name__)
     if name in _API_NAMES:
         from . import api
         return getattr(api, name)

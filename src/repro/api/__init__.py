@@ -15,9 +15,11 @@ from __future__ import annotations
 from typing import Optional
 
 from ..core.graph import Graph
+from ..serve.options import SchedulerOptions
 from .cache import ExecutableCache, resolve_cache_dir
 from .executable import Executable, deserialize
 from .options import CompileOptions
+from .serve import serve
 from .targets import (available_targets, get_target, register_target,
                       GraphExecutable, InterpretExecutable, JitExecutable)
 
@@ -83,4 +85,6 @@ __all__ = [
     "get_target",
     "register_target",
     "resolve_cache_dir",
+    "SchedulerOptions",
+    "serve",
 ]

@@ -7,7 +7,7 @@ so the LLM stack and the paper's CNN compiler are driven identically:
     exe = repro.compile(get_config("qwen2.5-14b", smoke=True),
                         CompileOptions(target="engine"), params=params)
     exe(tokens=toks)["logits"]          # jitted forward
-    eng = exe.serve(slots=4)            # continuous-batching engine
+    sched = exe.serve(slots=4)          # continuous-batching scheduler
 """
 
 from __future__ import annotations
@@ -58,12 +58,11 @@ class ModelExecutable(Executable):
             logits = self._fwd(self.params, batch)
         return {"logits": logits}
 
-    def serve(self, *, slots: int = 4, max_len: int = 256,
-              fold: bool = True, seed: int = 0):
-        """Build the continuous-batching serving engine over this model."""
-        from ..inference import Engine
-        return Engine(self.model, self.params, slots=slots,
-                      max_len=max_len, fold=fold, seed=seed)
+    def serve(self, options=None, **kw):
+        """Build the continuous-batching scheduler over this executable
+        (shorthand for ``repro.serve(exe, options, **kw)``)."""
+        from .serve import serve as api_serve
+        return api_serve(self, options, **kw)
 
     # ------------------------------------------------------------------
     def cost_summary(self):

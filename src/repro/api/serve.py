@@ -1,0 +1,53 @@
+"""``repro.serve`` — the serving funnel over compiled executables.
+
+    exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
+    sched = repro.serve(exe, repro.SchedulerOptions(slots=8))
+
+Takes an :class:`Executable` produced by the ``"engine"`` target (or
+anything exposing ``model`` + ``params``) and returns a
+:class:`repro.serve.Scheduler` — the continuous-batching step loop,
+slot/KV-cache manager and per-request metrics live in
+:mod:`repro.serve`; this module is only the API seam that pairs the
+compiled artifact with a scheduling policy.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+from ..serve.options import SchedulerOptions
+from ..serve.scheduler import Scheduler
+
+_SERVE_HINT = (
+    "repro.serve() drives framework-scale executables: compile with "
+    "CompileOptions(target='engine') first (graph-IR executables are "
+    "single-shot programs with no KV cache to schedule over)"
+)
+
+
+def serve(executable, options: Optional[SchedulerOptions] = None, *,
+          sampler: Optional[Callable] = None,
+          clock: Optional[Callable[[], float]] = None,
+          **kw) -> Scheduler:
+    """Build a continuous-batching :class:`Scheduler` over ``executable``.
+
+    ``executable`` must expose ``model`` (a ``models.api.Model``) and
+    ``params`` — i.e. come from ``repro.compile(cfg,
+    CompileOptions(target="engine"))``.  Remaining keyword args override
+    ``SchedulerOptions`` fields (``repro.serve(exe, slots=8)``);
+    ``sampler`` and ``clock`` are injection points for tests
+    (deterministic token streams, fake time).
+    """
+    model = getattr(executable, "model", None)
+    params = getattr(executable, "params", None)
+    if model is None or params is None or not hasattr(model, "decode_step"):
+        raise TypeError(
+            f"cannot serve {type(executable).__name__}: {_SERVE_HINT}")
+    if options is None:
+        options = SchedulerOptions()
+    if kw:
+        options = options.replace(**kw)
+    extra = {}
+    if clock is not None:
+        extra["clock"] = clock
+    return Scheduler(model, params, options, sampler=sampler, **extra)

@@ -1,167 +1,88 @@
-"""Batched serving engine: prefill/decode with slot-level continuous
-batching.
+"""Engine — DEPRECATED shim over ``repro.serve``.
 
-The compile-then-serve flow mirrors the paper's ``CompiledNN``: the
-engine owns the cache memory layout (the paper: "input and output
-tensors are owned by CompiledNN because it needs control over the
-actual memory layout"), compiles `prefill` and `decode_step` once per
-shape, and after that serving never interprets model structure.
+The slot-level continuous-batching loop that lived here was extracted
+and generalized into :mod:`repro.serve` (``Scheduler`` +
+``SlotManager`` + per-request metrics).  The modern spelling::
 
-Design:
-* B fixed decode slots; each holds one request's KV/state cache rows.
-* New requests are prefilled one at a time (exact prompt length —
-  runtime specialization; repeated lengths hit jit's trace cache) and
-  their cache is spliced into a free slot.
-* One batched decode step advances every active slot; finished slots
-  (EOS / max_tokens) are refilled from the queue — continuous batching
-  at slot granularity.
-* The decode step donates the cache buffers (`donate_argnums`), the
-  framework-scale version of the paper's in-place memory planning.
-* ``fold_norms`` runs at engine construction (compile-time weight
-  rewriting, paper §3.5).
+    import repro
+    exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
+    sched = repro.serve(exe, repro.SchedulerOptions(slots=4))
+
+This class survives one deprecation cycle so existing call sites keep
+working: the constructor signature, ``submit`` / ``step`` / ``run``,
+and the ``cache`` / ``fold_report`` / ``done`` attributes are preserved
+by delegating to a :class:`repro.serve.Scheduler`.  A single
+``DeprecationWarning`` is emitted per process.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import warnings
+from typing import Any, Dict, List
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from ..serve import Completion, Request, Scheduler, SchedulerOptions
 
-from ..models.api import Model
-from .fold_norms import fold_norms
+__all__ = ["Engine", "Request", "Completion"]
 
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # (s,) int32
-    max_new_tokens: int = 32
-    eos_id: int = -1              # -1 = never
-    temperature: float = 0.0      # 0 = greedy
+_warned = False
 
 
-@dataclasses.dataclass
-class Completion:
-    uid: int
-    tokens: List[int]
+def _warn_once() -> None:
+    global _warned
+    if not _warned:
+        _warned = True
+        warnings.warn(
+            "inference.Engine is deprecated; use repro.serve(executable, "
+            "repro.SchedulerOptions(...)) instead",
+            DeprecationWarning,
+            stacklevel=3,
+        )
 
 
 class Engine:
-    def __init__(self, model: Model, params, *, slots: int = 4,
-                 max_len: int = 256, fold: bool = True, seed: int = 0):
-        self.model = model
-        self.cfg = model.cfg
-        if fold:
-            params, self.fold_report = fold_norms(self.cfg, params)
-        else:
-            self.fold_report = {"folds": 0}
-        self.params = params
-        self.slots = slots
-        self.max_len = max_len
-        self.cache = model.init_cache(slots, max_len)
-        self.key = jax.random.PRNGKey(seed)
+    """Deprecated: serve a model via the legacy slot-loop surface."""
 
-        # slot bookkeeping (host side)
-        self.active = [False] * slots
-        self.remaining = [0] * slots
-        self.eos = [-1] * slots
-        self.temp = [0.0] * slots
-        self.uid = [-1] * slots
-        self.generated: Dict[int, List[int]] = {}
-        self.queue: List[Request] = []
-        self.done: List[Completion] = []
-        self.last_token = np.zeros((slots, 1), np.int32)
+    def __init__(self, model, params, *, slots: int = 4,
+                 max_len: int = 256, fold: bool = True,
+                 seed: int = 0) -> None:
+        _warn_once()
+        self._sched = Scheduler(
+            model, params,
+            SchedulerOptions(slots=slots, max_len=max_len, fold=fold,
+                             seed=seed))
 
-        # compiled programs (donated cache: in-place buffer reuse)
-        self._decode = jax.jit(
-            lambda p, c, t: model.decode_step(p, c, t),
-            donate_argnums=(1,))
-        self._prefill = jax.jit(
-            lambda p, b, c: model.prefill(p, b, c))
-        self._splice = jax.jit(self._splice_impl, donate_argnums=(0,),
-                               static_argnums=(2,))
+    # -- legacy attribute surface --------------------------------------
+    @property
+    def scheduler(self) -> Scheduler:
+        """The new-API scheduler this shim wraps."""
+        return self._sched
 
-    # ------------------------------------------------------------------
-    @staticmethod
-    def _splice_impl(cache, one_cache, slot: int):
-        """Copy the single-row cache `one_cache` into row `slot` of every
-        batch-indexed leaf.  Leaves are (L, B, ...) except pos (B,)."""
-        def put(dst, src):
-            if dst.ndim == 1:                      # pos (B,)
-                return dst.at[slot].set(src[0])
-            return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
-        return jax.tree.map(put, cache, one_cache)
+    @property
+    def cache(self) -> Any:
+        return self._sched.slot_manager.cache
 
+    @property
+    def fold_report(self) -> Dict[str, Any]:
+        return self._sched.fold_report
+
+    @property
+    def done(self) -> List[Completion]:
+        return self._sched.done
+
+    @property
+    def generated(self) -> Dict[int, List[int]]:
+        return self._sched.generated
+
+    @property
+    def params(self):
+        return self._sched.params
+
+    # -- legacy methods ------------------------------------------------
     def submit(self, req: Request) -> None:
-        self.queue.append(req)
+        self._sched.submit(req)
 
-    # ------------------------------------------------------------------
-    def _fill_free_slots(self) -> None:
-        for s in range(self.slots):
-            if self.active[s] or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            prompt = np.asarray(req.prompt, np.int32)[None, :]
-            batch = {"tokens": jnp.asarray(prompt)}
-            if self.cfg.family == "audio":
-                batch["frames"] = jnp.zeros(
-                    (1, self.cfg.n_frames, self.cfg.d_model), jnp.float32)
-            if self.cfg.family == "vlm":
-                batch["patches"] = jnp.zeros(
-                    (1, self.cfg.num_image_tokens, self.cfg.vit_dim),
-                    jnp.float32)
-            one = self.model.init_cache(1, self.max_len)
-            logits, one = self._prefill(self.params, batch, one)
-            self.cache = self._splice(self.cache, one, s)
-            tok = self._sample(logits[:, -1], req.temperature)
-            self.last_token[s, 0] = int(tok[0])
-            self.active[s] = True
-            self.remaining[s] = req.max_new_tokens - 1
-            self.eos[s] = req.eos_id
-            self.temp[s] = req.temperature
-            self.uid[s] = req.uid
-            self.generated[req.uid] = [int(tok[0])]
-
-    def _sample(self, logits: jnp.ndarray, temperature: float) -> np.ndarray:
-        if temperature <= 0.0:
-            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        self.key, sub = jax.random.split(self.key)
-        return np.asarray(
-            jax.random.categorical(sub, logits / temperature, axis=-1),
-            np.int32)
-
-    def _retire(self, s: int) -> None:
-        self.done.append(Completion(self.uid[s], self.generated[self.uid[s]]))
-        self.active[s] = False
-
-    # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: refill slots, one batched decode step.
-        Returns the number of active slots advanced."""
-        self._fill_free_slots()
-        if not any(self.active):
-            return 0
-        logits, self.cache = self._decode(
-            self.params, self.cache, jnp.asarray(self.last_token))
-        logits = logits[:, 0]
-        for s in range(self.slots):
-            if not self.active[s]:
-                continue
-            tok = int(self._sample(logits[s:s + 1], self.temp[s])[0])
-            self.generated[self.uid[s]].append(tok)
-            self.last_token[s, 0] = tok
-            self.remaining[s] -= 1
-            if self.remaining[s] <= 0 or tok == self.eos[s]:
-                self._retire(s)
-        return sum(self.active)
+        return self._sched.step()
 
     def run(self, max_steps: int = 10_000) -> List[Completion]:
-        """Drain the queue; returns completions in finish order."""
-        steps = 0
-        while (self.queue or any(self.active)) and steps < max_steps:
-            self.step()
-            steps += 1
-        return self.done
+        return self._sched.run(max_steps)

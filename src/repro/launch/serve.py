@@ -1,16 +1,19 @@
-"""Batched serving driver.
+"""Serving CLI — a thin driver over ``repro.serve``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-14b \
-        --smoke --requests 16 --slots 4 --max-new 16
+        --smoke --requests 16 --slots 8 --max-new 16
 
-Builds the engine (compile-at-load, norm-fold, slot-level continuous
-batching) and drains a synthetic request queue, reporting per-phase
-latency stats — the serving analogue of the paper's Table 1 timing.
+Compiles the model through ``repro.compile(target="engine")``, builds
+the continuous-batching scheduler, drains a synthetic request queue and
+prints the scheduler's metrics summary (TTFT, tok/s, batch occupancy) —
+the serving analogue of the paper's Table 1 timing.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 import time
 
 import numpy as np
@@ -24,38 +27,50 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--admission", default="fcfs",
+                    choices=("fcfs", "shortest"))
     ap.add_argument("--no-fold", action="store_true")
+    ap.add_argument("--json", action="store_true",
+                    help="print the metrics summary as JSON")
     args = ap.parse_args(argv)
 
     import repro
     from repro.configs import get_config
-    from repro.inference import Request
+    from repro.serve import Request
 
     cfg = get_config(args.arch, smoke=args.smoke)
 
     t0 = time.perf_counter()
     exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
-    eng = exe.serve(slots=args.slots, max_len=args.max_len,
-                    fold=not args.no_fold)
+    sched = repro.serve(exe, repro.SchedulerOptions(
+        slots=args.slots, max_len=args.max_len, admission=args.admission,
+        fold=not args.no_fold))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.integers(4, 17))
-        eng.submit(Request(uid=i,
-                           prompt=rng.integers(0, cfg.vocab, plen),
-                           max_new_tokens=args.max_new))
+        sched.submit(Request(uid=i,
+                             prompt=rng.integers(0, cfg.vocab, plen),
+                             max_new_tokens=args.max_new))
     t_build = time.perf_counter() - t0
-    print(f"[serve] engine up in {t_build:.2f}s "
-          f"(norm folds: {eng.fold_report['folds']})", flush=True)
+    # progress goes to stderr so that --json leaves stdout parseable
+    print(f"[serve] scheduler up in {t_build:.2f}s "
+          f"(norm folds: {sched.fold_report['folds']})",
+          file=sys.stderr if args.json else sys.stdout, flush=True)
 
-    t0 = time.perf_counter()
-    done = eng.run()
-    dt = time.perf_counter() - t0
-    total_tokens = sum(len(c.tokens) for c in done)
-    print(f"[serve] {len(done)} completions, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens / max(dt, 1e-9):.1f} tok/s)",
-          flush=True)
-    for c in sorted(done, key=lambda c: c.uid)[:4]:
-        print(f"  uid={c.uid} tokens={c.tokens[:8]}...", flush=True)
+    done = sched.run()
+    summary = sched.summary()
+    if args.json:
+        print(json.dumps(summary, indent=2), flush=True)
+    else:
+        print(f"[serve] {summary['completed']} completions, "
+              f"{summary['total_new_tokens']} tokens "
+              f"({(summary['tokens_per_s'] or 0):.1f} tok/s, "
+              f"mean TTFT {(summary['mean_ttft'] or 0) * 1e3:.0f}ms, "
+              f"occupancy {(summary['mean_batch_occupancy'] or 0):.2f}"
+              f"/{args.slots})", flush=True)
+        for c in sorted(done, key=lambda c: c.uid)[:4]:
+            print(f"  uid={c.uid} reason={c.finish_reason} "
+                  f"tokens={c.tokens[:8]}...", flush=True)
     return 0
 
 

@@ -1,0 +1,60 @@
+"""SchedulerOptions — the one options surface for ``repro.serve``.
+
+The serving twin of ``CompileOptions``: a frozen, hashable dataclass
+holding every scheduling choice, so a serving configuration can be
+logged, compared and embedded in benchmark artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+ADMISSION_POLICIES = ("fcfs", "shortest")
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerOptions:
+    """Every serving-time choice, in one place.
+
+    slots:        number of concurrent decode slots (the fixed batch the
+                  decode program is specialized for; continuous batching
+                  rebatches at slot granularity every step).
+    max_len:      KV-cache capacity per slot.  A request whose prompt
+                  alone exceeds it is rejected at submit; ``max_new_tokens``
+                  is clamped so the cache can never overflow.
+    admission:    queue discipline used when a slot frees up —
+                  ``"fcfs"`` (arrival order) or ``"shortest"`` (shortest
+                  prompt first, minimizes mean TTFT under bursty load).
+    max_queue:    admission control: ``submit`` raises
+                  :class:`QueueFullError` once this many requests are
+                  waiting.  ``None`` = unbounded.
+    fold:         run ``fold_norms`` on the params at scheduler build
+                  (compile-time weight rewriting, paper §3.5).
+    seed:         PRNG seed for the default temperature sampler.
+    """
+
+    slots: int = 4
+    max_len: int = 256
+    admission: str = "fcfs"
+    max_queue: Optional[int] = None
+    fold: bool = True
+    seed: int = 0
+
+    def __post_init__(self) -> None:
+        if self.slots <= 0:
+            raise ValueError(f"slots must be positive, got {self.slots}")
+        if self.max_len <= 1:
+            raise ValueError(f"max_len must be > 1, got {self.max_len}")
+        if self.admission not in ADMISSION_POLICIES:
+            raise ValueError(f"admission must be one of "
+                             f"{ADMISSION_POLICIES}, got {self.admission!r}")
+        if self.max_queue is not None and self.max_queue <= 0:
+            raise ValueError(f"max_queue must be positive or None, "
+                             f"got {self.max_queue}")
+
+    def replace(self, **kw) -> "SchedulerOptions":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)

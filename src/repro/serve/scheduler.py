@@ -1,0 +1,292 @@
+"""Continuous-batching request scheduler over a compiled model.
+
+The step loop rebatches every decode step:
+
+    1. admit — while a slot is free and requests wait, pick one (FCFS or
+       shortest-prompt), prefill it at its exact prompt length (runtime
+       specialization; repeated lengths hit jit's trace cache), splice
+       its cache row into the batched cache and sample its first token;
+    2. decode — ONE batched decode step advances every active slot (the
+       program is specialized for the fixed slot count; the cache is
+       donated, the framework-scale version of the paper's in-place
+       memory planning);
+    3. sample + evict — per-slot sampling, EOS / length retirement frees
+       slots for the next iteration's admissions.
+
+``submit`` is thread-safe and non-blocking, so a producer can feed the
+queue while another thread (or an asyncio executor) drives ``step`` /
+``run`` — the scheduler itself never blocks waiting for requests.
+
+Per-request metrics (TTFT, decode tok/s, queue depth at submit) and
+aggregate counters (batch occupancy, total throughput) come from an
+injected clock, so tests assert exact numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .metrics import RequestMetrics, SchedulerMetrics
+from .options import SchedulerOptions
+from .slots import SlotManager, SlotState
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (s,) int32
+    max_new_tokens: int = 32
+    eos_id: int = -1              # -1 = never
+    temperature: float = 0.0      # 0 = greedy
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    tokens: List[int]
+    finish_reason: str = "length"   # "eos" | "length"
+
+
+class QueueFullError(RuntimeError):
+    """Raised by ``submit`` when ``SchedulerOptions.max_queue`` is hit."""
+
+
+class TemperatureSampler:
+    """Default sampler: greedy at temperature 0, categorical otherwise.
+
+    The sampler protocol is ``sample(logits, temperature, *, uid, index)
+    -> int`` with ``logits`` of shape (1, vocab) and ``index`` the
+    number of tokens already generated for that request — tests inject
+    fakes that script tokens per request.
+    """
+
+    def __init__(self, seed: int = 0) -> None:
+        self.key = jax.random.PRNGKey(seed)
+
+    def __call__(self, logits: jnp.ndarray, temperature: float, *,
+                 uid: int, index: int) -> int:
+        if temperature <= 0.0:
+            return int(jnp.argmax(logits, axis=-1)[0])
+        self.key, sub = jax.random.split(self.key)
+        return int(jax.random.categorical(
+            sub, logits / temperature, axis=-1)[0])
+
+
+class Scheduler:
+    """Drive a compiled model under concurrent multi-request load."""
+
+    def __init__(self, model, params, options: SchedulerOptions, *,
+                 sampler: Optional[Callable] = None,
+                 clock: Callable[[], float] = time.perf_counter) -> None:
+        self.model = model
+        self.cfg = model.cfg
+        self.options = options
+        if options.fold:
+            from ..inference.fold_norms import fold_norms
+            params, self.fold_report = fold_norms(self.cfg, params)
+        else:
+            self.fold_report = {"folds": 0}
+        self.params = params
+        self.sampler = sampler or TemperatureSampler(options.seed)
+        self.clock = clock
+
+        self.slot_manager = SlotManager(model, options.slots,
+                                        options.max_len)
+        self._lock = threading.Lock()
+        self._queue: List[Request] = []
+        self.done: List[Completion] = []
+        self._pending: List[Completion] = []  # finished, not yet popped
+        self.generated: Dict[int, List[int]] = {}
+        self.request_metrics: Dict[int, RequestMetrics] = {}
+        self.metrics = SchedulerMetrics()
+        self.last_token = np.zeros((options.slots, 1), np.int32)
+
+        # compiled programs (donated cache: in-place buffer reuse)
+        self._decode = jax.jit(
+            lambda p, c, t: model.decode_step(p, c, t),
+            donate_argnums=(1,))
+        self._prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c))
+
+    # -- queue ---------------------------------------------------------
+    def submit(self, req: Request) -> RequestMetrics:
+        """Enqueue a request (thread-safe, non-blocking).
+
+        Raises :class:`QueueFullError` under admission control and
+        ``ValueError`` if the prompt alone exceeds ``max_len``.
+        """
+        plen = int(np.asarray(req.prompt).shape[-1])
+        if plen >= self.options.max_len:
+            raise ValueError(
+                f"prompt of {plen} tokens does not fit max_len="
+                f"{self.options.max_len} (uid={req.uid})")
+        with self._lock:
+            if (self.options.max_queue is not None
+                    and len(self._queue) >= self.options.max_queue):
+                self.metrics.rejected += 1
+                raise QueueFullError(
+                    f"queue full ({self.options.max_queue}); "
+                    f"rejecting uid={req.uid}")
+            if req.uid in self.request_metrics:
+                raise ValueError(f"duplicate request uid={req.uid}")
+            depth = len(self._queue)
+            self._queue.append(req)
+            self.metrics.submitted += 1
+            self.metrics.peak_queue_depth = max(
+                self.metrics.peak_queue_depth, len(self._queue))
+            m = RequestMetrics(uid=req.uid, prompt_tokens=plen,
+                               submitted_at=self.clock(),
+                               queue_depth_at_submit=depth)
+            self.request_metrics[req.uid] = m
+            return m
+
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    def num_active(self) -> int:
+        return self.slot_manager.num_active()
+
+    def _pop_next(self) -> Optional[Request]:
+        with self._lock:
+            if not self._queue:
+                return None
+            if self.options.admission == "shortest":
+                i = min(range(len(self._queue)),
+                        key=lambda j: (len(self._queue[j].prompt), j))
+            else:                                   # fcfs
+                i = 0
+            return self._queue.pop(i)
+
+    # -- admission -----------------------------------------------------
+    def _prefill_batch(self, prompt: np.ndarray) -> Dict[str, jnp.ndarray]:
+        batch = {"tokens": jnp.asarray(prompt)}
+        if self.cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.n_frames, self.cfg.d_model), jnp.float32)
+        if self.cfg.family == "vlm":
+            batch["patches"] = jnp.zeros(
+                (1, self.cfg.num_image_tokens, self.cfg.vit_dim),
+                jnp.float32)
+        return batch
+
+    def _admit_free_slots(self) -> None:
+        for slot in self.slot_manager.free_slots():
+            req = self._pop_next()
+            if req is None:
+                return
+            m = self.request_metrics[req.uid]
+            m.admitted_at = self.clock()
+            self.metrics.admitted += 1
+            if self.metrics.started_at is None:
+                self.metrics.started_at = m.admitted_at
+
+            prompt = np.asarray(req.prompt, np.int32)[None, :]
+            one = self.model.init_cache(1, self.options.max_len)
+            logits, one = self._prefill(
+                self.params, self._prefill_batch(prompt), one)
+            tok = self.sampler(logits[:, -1], req.temperature,
+                               uid=req.uid, index=0)
+
+            # clamp so prompt + generated tokens can never outrun the
+            # per-slot cache capacity
+            budget = self.options.max_len - prompt.shape[1]
+            self.slot_manager.admit(slot, SlotState(
+                uid=req.uid,
+                remaining=min(req.max_new_tokens, budget) - 1,
+                eos_id=req.eos_id,
+                temperature=req.temperature), one)
+            self.last_token[slot, 0] = tok
+            self.generated[req.uid] = [tok]
+            m.first_token_at = self.clock()
+            m.new_tokens = 1
+            self.metrics.total_new_tokens += 1
+            if tok == req.eos_id or min(req.max_new_tokens, budget) <= 1:
+                self._retire(slot, "eos" if tok == req.eos_id else "length")
+
+    # -- retirement ----------------------------------------------------
+    def _retire(self, slot: int, reason: str) -> None:
+        st = self.slot_manager.evict(slot)
+        m = self.request_metrics[st.uid]
+        m.finished_at = self.clock()
+        m.finish_reason = reason
+        self.metrics.completed += 1
+        c = Completion(st.uid, self.generated[st.uid],
+                       finish_reason=reason)
+        self.done.append(c)
+        self._pending.append(c)
+
+    # -- the step loop -------------------------------------------------
+    def step(self) -> int:
+        """One scheduler iteration: admit into free slots, one batched
+        decode step, sample + evict.  Returns the number of slots still
+        active afterwards."""
+        self._admit_free_slots()
+        active = self.slot_manager.active_slots()
+        if not active:
+            return 0
+        logits, self.slot_manager.cache = self._decode(
+            self.params, self.slot_manager.cache,
+            jnp.asarray(self.last_token))
+        logits = logits[:, 0]
+        self.metrics.decode_steps += 1
+        self.metrics.decode_slot_steps += len(active)
+        for slot in active:
+            st = self.slot_manager.state(slot)
+            m = self.request_metrics[st.uid]
+            tok = self.sampler(logits[slot:slot + 1], st.temperature,
+                               uid=st.uid, index=m.new_tokens)
+            self.generated[st.uid].append(tok)
+            self.last_token[slot, 0] = tok
+            m.new_tokens += 1
+            self.metrics.total_new_tokens += 1
+            st.remaining -= 1
+            if tok == st.eos_id:
+                self._retire(slot, "eos")
+            elif st.remaining <= 0:
+                self._retire(slot, "length")
+        self.metrics.last_step_at = self.clock()
+        return self.slot_manager.num_active()
+
+    def run(self, max_steps: int = 10_000) -> List[Completion]:
+        """Drain the queue; returns all completions in finish order."""
+        steps = 0
+        while ((self.queue_depth() or self.slot_manager.num_active())
+               and steps < max_steps):
+            self.step()
+            steps += 1
+        return self.done
+
+    def pop_completions(self, *, purge: bool = False) -> List[Completion]:
+        """Completions finished since the last pop (streaming drain).
+
+        With ``purge=True`` the scheduler also forgets the popped
+        requests entirely — their ``done`` entries, token lists,
+        per-request metrics — and their uids become reusable.  A
+        long-running server MUST drain with ``purge=True`` or
+        per-request state grows without bound (aggregate
+        ``SchedulerMetrics`` counters are unaffected; purged requests
+        simply drop out of ``summary()``'s mean-TTFT)."""
+        out, self._pending = self._pending, []
+        if purge and out:
+            drop = {c.uid for c in out}
+            self.done = [c for c in self.done if c.uid not in drop]
+            for uid in drop:
+                self.generated.pop(uid, None)
+                self.request_metrics.pop(uid, None)
+        return out
+
+    # -- reporting -----------------------------------------------------
+    def summary(self) -> dict:
+        return self.metrics.summary(self.request_metrics)
+
+    # legacy Engine attribute surface, used by the deprecated shim
+    @property
+    def cache(self) -> Any:
+        return self.slot_manager.cache

@@ -1,0 +1,84 @@
+"""Slot / KV-cache manager: the memory half of continuous batching.
+
+Owns the batched cache pytree (the paper: "input and output tensors are
+owned by CompiledNN because it needs control over the actual memory
+layout") and the per-slot host bookkeeping.  Admission splices a
+freshly prefilled single-row cache into a free slot; eviction just
+marks the slot free — the row is overwritten by the next admission, so
+no memory moves on retire.
+
+Extracted and generalized from ``inference.engine.Engine``'s
+``_splice_impl`` / ``_fill_free_slots`` / ``_retire``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import jax
+
+
+@dataclasses.dataclass
+class SlotState:
+    """Host-side record for one occupied decode slot."""
+
+    uid: int
+    remaining: int           # decode steps left before forced retire
+    eos_id: int              # -1 = never
+    temperature: float
+
+
+class SlotManager:
+    def __init__(self, model, slots: int, max_len: int) -> None:
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = model.init_cache(slots, max_len)
+        self._states: List[Optional[SlotState]] = [None] * slots
+        # donate the batched cache: splice writes one row in place
+        self._splice = jax.jit(self._splice_impl, donate_argnums=(0,),
+                               static_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _splice_impl(cache, one_cache, slot: int):
+        """Copy the single-row cache ``one_cache`` into row ``slot`` of
+        every batch-indexed leaf.  Leaves are (L, B, ...) except the
+        position vector (B,)."""
+        def put(dst, src):
+            if dst.ndim == 1:                      # pos (B,)
+                return dst.at[slot].set(src[0])
+            return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+        return jax.tree.map(put, cache, one_cache)
+
+    # ------------------------------------------------------------------
+    def free_slots(self) -> List[int]:
+        return [s for s, st in enumerate(self._states) if st is None]
+
+    def active_slots(self) -> List[int]:
+        return [s for s, st in enumerate(self._states) if st is not None]
+
+    def num_active(self) -> int:
+        return sum(st is not None for st in self._states)
+
+    def state(self, slot: int) -> Optional[SlotState]:
+        return self._states[slot]
+
+    # ------------------------------------------------------------------
+    def admit(self, slot: int, state: SlotState, one_cache: Any) -> None:
+        """Occupy ``slot`` with ``state``, splicing its prefilled
+        single-row cache into the batched cache."""
+        if self._states[slot] is not None:
+            raise RuntimeError(f"slot {slot} is occupied "
+                               f"(uid={self._states[slot].uid})")
+        self.cache = self._splice(self.cache, one_cache, slot)
+        self._states[slot] = state
+
+    def evict(self, slot: int) -> SlotState:
+        """Free ``slot``; the cache row is left in place and simply
+        overwritten by the next admission."""
+        st = self._states[slot]
+        if st is None:
+            raise RuntimeError(f"slot {slot} is already free")
+        self._states[slot] = None
+        return st
