@@ -81,8 +81,9 @@ def deserialize(data: bytes) -> Executable:
     options = CompileOptions.from_dict(meta["options"])
     # Never honor a cache_dir embedded in (possibly untrusted) bytes:
     # the cache pickle-loads from that directory.  None still falls
-    # back to the local $REPRO_CACHE_DIR.
-    options = options.replace(cache_dir=None)
+    # back to the local $REPRO_CACHE_DIR.  Same for dump_ir, which
+    # writes files to an arbitrary path.
+    options = options.replace(cache_dir=None, dump_ir=None)
     kind = meta.get("kind")
     if kind == "graph":
         from ..core.keras_like import load_model

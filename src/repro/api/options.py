@@ -38,6 +38,10 @@ class CompileOptions:
                    falls back to ``$REPRO_CACHE_DIR``; if that is unset
                    the on-disk cache is disabled (in-process caching
                    always applies).
+    dump_ir:       dump the IR between compiler passes: a directory
+                   (one ``NN-<pass>.txt`` summary per stage) or ``"-"``
+                   for stderr.  ``None`` falls back to
+                   ``$REPRO_DUMP_IR``; unset disables.
     """
 
     target: str = "jit"
@@ -47,6 +51,7 @@ class CompileOptions:
     batch_buckets: Tuple[int, ...] = ()
     donate_inputs: bool = False
     cache_dir: Optional[str] = None
+    dump_ir: Optional[str] = None
 
     def __post_init__(self) -> None:
         if self.precision not in PRECISIONS:
@@ -79,11 +84,13 @@ class CompileOptions:
         """Stable string of every field that affects generated code.
 
         ``cache_dir`` is excluded (where the cache lives must not change
-        what is cached) and so is ``batch_buckets`` (the per-batch
-        program is identical however the caller buckets; the batch size
-        itself is a separate key component).
+        what is cached), so is ``batch_buckets`` (the per-batch program
+        is identical however the caller buckets; the batch size itself
+        is a separate key component), and so is ``dump_ir`` (a debugging
+        side channel, not a codegen choice).
         """
         d = self.to_dict()
         d.pop("cache_dir")
         d.pop("batch_buckets")
+        d.pop("dump_ir")
         return json.dumps(d, sort_keys=True, default=str)

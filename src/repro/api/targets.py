@@ -30,8 +30,9 @@ import numpy as np
 
 from ..core.graph import Graph
 from ..core.keras_like import save_model
-from ..core.lowering import execute_graph
+from ..core.lowering import execute_graph, lowering_fingerprint
 from ..core.passes import run_pipeline
+from ..core.selection import KernelChoice, select_kernels
 from ..core.simple import SimpleNN
 from .cache import cache_key, open_cache
 from .executable import Executable, pack
@@ -134,19 +135,34 @@ class InterpretExecutable(GraphExecutable):
 
 class JitExecutable(GraphExecutable):
     """Pass pipeline + AOT-compiled XLA program per batch size, with the
-    persistent on-disk executable cache."""
+    persistent on-disk executable cache.
+
+    ``lowering_target`` names the lowering-rule registry slice to
+    compile with (``"jit"`` uses only the generic rules; ``"pallas"``
+    activates the Pallas-kernel overrides, gated per node by the static
+    kernel selector).  ``use_pallas=True`` is the legacy spelling of
+    ``lowering_target="pallas"``.
+    """
 
     def __init__(self, graph: Graph, options: CompileOptions,
-                 *, use_pallas: bool = False) -> None:
+                 *, lowering_target: Optional[str] = None,
+                 use_pallas: bool = False) -> None:
         super().__init__(graph, options)
-        self.use_pallas = use_pallas
+        self.lowering_target = (lowering_target
+                                or ("pallas" if use_pallas else "jit"))
         t0 = time.perf_counter()
-        self.graph, self.report = run_pipeline(graph, options.passes)
+        self.graph, self.report = run_pipeline(
+            graph, options.passes, dump_ir=options.dump_ir)
         self._pass_time = time.perf_counter() - t0
         self._fns: Dict[int, Callable] = {}
+        self._selections: Dict[int, Dict[str, KernelChoice]] = {}
         self._disk = open_cache(options.cache_dir)
         self._xla_cost: Optional[dict] = None
         self._weights_digest_memo: Optional[str] = None
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.lowering_target == "pallas"
 
     # -- cache key -----------------------------------------------------
     def _weights_digest(self) -> str:
@@ -163,7 +179,8 @@ class JitExecutable(GraphExecutable):
     def _key(self, batch_size: int) -> str:
         weights = self._weights_digest() if self.options.embed_weights else ""
         return cache_key(self.graph.structure_hash(), weights,
-                         self.options.cache_token(), f"batch={batch_size}")
+                         self.options.cache_token(), f"batch={batch_size}",
+                         f"rules={lowering_fingerprint(self.lowering_target)}")
 
     # -- compilation ---------------------------------------------------
     def ensure_compiled(self, batch_size: int = 1) -> Callable:
@@ -174,8 +191,19 @@ class JitExecutable(GraphExecutable):
         t0 = time.perf_counter()
         input_names = list(self.graph.inputs)
         params = {k: jnp.asarray(v) for k, v in self.graph.params.items()}
+        # Static kernel selection for this specialization: decided from
+        # shapes before tracing, honored by the target lowering rules,
+        # surfaced in cost_summary().
+        selection = select_kernels(
+            self.graph, batch_size=batch_size,
+            target=self.lowering_target,
+            precision=self.options.precision)
+        if selection:   # targets without kernel decisions stay silent
+            self._selections[batch_size] = selection
         lower_kw = dict(precision=self.options.precision,
-                        use_pallas=self.use_pallas)
+                        target=self.lowering_target,
+                        batch_size=batch_size,
+                        selection=selection)
         in_specs = [
             jax.ShapeDtypeStruct((batch_size,) + self.graph.inputs[n].shape,
                                  self.graph.inputs[n].dtype)
@@ -262,9 +290,16 @@ class JitExecutable(GraphExecutable):
             "params": len(self.graph.params),
             "param_bytes": int(sum(v.nbytes
                                    for v in self.graph.params.values())),
+            "pipeline": self.report.get("pipeline"),
             "passes": self.report["passes"],
             "memory_plan": self.report["memory_plan"],
         }
+        if self._selections:
+            # Kernel-selector decisions, per compiled batch size.
+            out["kernel_selection"] = {
+                batch: [c.to_dict() for c in sel.values()]
+                for batch, sel in sorted(self._selections.items())
+            }
         if self._xla_cost:
             out["xla"] = {k: self._xla_cost[k]
                           for k in ("flops", "bytes accessed")
@@ -274,9 +309,9 @@ class JitExecutable(GraphExecutable):
 
 @register_target("jit")
 def _build_jit(graph: Graph, options: CompileOptions) -> Executable:
-    return JitExecutable(graph, options, use_pallas=False)
+    return JitExecutable(graph, options, lowering_target="jit")
 
 
 @register_target("pallas")
 def _build_pallas(graph: Graph, options: CompileOptions) -> Executable:
-    return JitExecutable(graph, options, use_pallas=True)
+    return JitExecutable(graph, options, lowering_target="pallas")

@@ -11,15 +11,25 @@ The compilation entry point lives in ``repro.api`` (``repro.compile``);
 the shared graph→JAX lowering is ``repro.core.lowering``.
 """
 
-from .graph import Graph, Node, TensorSpec
+from .graph import (Graph, Node, TensorSpec, register_op,
+                    register_shape_rule)
 from .keras_like import ModelBuilder, load_model, save_model
 from .compiler import CompiledModel
 from .simple import SimpleNN
-from .passes import run_pipeline, DEFAULT_PIPELINE
+from .passes import (run_pipeline, DEFAULT_PIPELINE, PassManager,
+                     PassOrderingError, PassVerificationError, register_pass)
+from .lowering import (execute_graph, register_lowering, registered_ops,
+                       UnsupportedOpError)
+from .selection import KernelChoice, select_kernels
 
 __all__ = [
-    "Graph", "Node", "TensorSpec",
+    "Graph", "Node", "TensorSpec", "register_op", "register_shape_rule",
     "ModelBuilder", "load_model", "save_model",
     "CompiledModel", "SimpleNN",
     "run_pipeline", "DEFAULT_PIPELINE",
+    "PassManager", "PassOrderingError", "PassVerificationError",
+    "register_pass",
+    "execute_graph", "register_lowering", "registered_ops",
+    "UnsupportedOpError",
+    "KernelChoice", "select_kernels",
 ]

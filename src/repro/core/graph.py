@@ -61,7 +61,33 @@ OPS: Dict[str, Tuple[str, ...]] = {
     "reshape": ("shape",),
     "flatten": (),
     "softmax": ("axis",),
+    # inputs: q (H,D), k_cache (S,Hkv,D), v_cache (S,Hkv,D)
+    # [, lengths () int32]; optional attr "scale" (default D**-0.5)
+    "decode_attention": (),
 }
+
+
+def register_op(name: str, required_attrs: Sequence[str] = ()) -> None:
+    """Extend the IR vocabulary with a new op (idempotent).  Pair with
+    :func:`register_shape_rule` and a ``repro.core.lowering``
+    ``@register_lowering`` rule to make it compilable end to end."""
+    OPS[name] = tuple(required_attrs)
+
+
+#: Shape-inference rules for ops registered from outside this module:
+#: op -> fn(node, input_specs, graph) -> TensorSpec.  Consulted before
+#: the built-in rules, so a plug-in op never edits ``_infer_node``.
+SHAPE_RULES: Dict[str, Any] = {}
+
+
+def register_shape_rule(op: str):
+    """Decorator: register the static shape rule for ``op``."""
+
+    def deco(fn):
+        SHAPE_RULES[op] = fn
+        return fn
+
+    return deco
 
 #: Activation functions the compiler understands.  ``fusable`` means the
 #: back end may apply them as an epilogue of a producing matmul/conv
@@ -242,6 +268,8 @@ class Graph:
     def _infer_node(self, node: Node, specs: Dict[str, TensorSpec]) -> TensorSpec:
         op = node.op
         ins = [specs[t] for t in node.inputs]
+        if op in SHAPE_RULES:
+            return SHAPE_RULES[op](node, ins, self)
         if op == "constant":
             return TensorSpec(tuple(self.params[node.params["value"]].shape))
         if op == "conv2d":
@@ -302,6 +330,19 @@ class Graph:
         if op == "flatten":
             return TensorSpec((ins[0].size,))
         if op == "softmax":
+            return ins[0]
+        if op == "decode_attention":
+            h, d = ins[0].shape
+            s, hkv, dk = ins[1].shape
+            if ins[1].shape != ins[2].shape:
+                raise ValueError(
+                    f"{op} {node.name!r}: K/V cache shapes differ "
+                    f"{ins[1].shape} vs {ins[2].shape}")
+            if dk != d or h % hkv:
+                raise ValueError(
+                    f"{op} {node.name!r}: q (H={h}, D={d}) incompatible "
+                    f"with cache (Hkv={hkv}, D={dk}); H must be a "
+                    f"multiple of Hkv")
             return ins[0]
         raise NotImplementedError(op)
 

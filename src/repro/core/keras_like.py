@@ -40,8 +40,9 @@ class ModelBuilder:
         return (self._rng.standard_normal(shape) * scale).astype(np.float32)
 
     # -- layers ---------------------------------------------------------
-    def input(self, shape: Sequence[int], name: str = "input") -> str:
-        return self.graph.add_input(name, shape)
+    def input(self, shape: Sequence[int], name: str = "input",
+              dtype: str = "float32") -> str:
+        return self.graph.add_input(name, shape, dtype)
 
     def conv2d(self, x: str, filters: int, kernel_size: Tuple[int, int],
                strides=(1, 1), padding="same", use_bias=True,
@@ -147,6 +148,17 @@ class ModelBuilder:
     def softmax(self, x: str, axis: int = -1) -> str:
         return self.graph.add_node("softmax", self._name("softmax"), [x],
                                    attrs={"axis": axis})
+
+    def decode_attention(self, q: str, k_cache: str, v_cache: str,
+                         lengths: Optional[str] = None,
+                         scale: Optional[float] = None) -> str:
+        """Single-token GQA decode attention over a KV cache.  ``q`` is
+        (H, D); caches are (S, Hkv, D); optional ``lengths`` is a scalar
+        int32 input of per-example valid context lengths."""
+        ins = [q, k_cache, v_cache] + ([lengths] if lengths else [])
+        attrs = {} if scale is None else {"scale": float(scale)}
+        return self.graph.add_node("decode_attention", self._name("attn"),
+                                   ins, attrs=attrs)
 
     def build(self, outputs: Sequence[str]) -> Graph:
         self.graph.set_outputs(list(outputs))

@@ -1,4 +1,4 @@
-"""Graph-IR → JAX lowering: one function per trace.
+"""Graph-IR → JAX lowering: a rule registry, one function per op.
 
 This is the back end shared by every compiled target: it walks an
 (optimized) graph once, at ``jax.jit`` trace time, emitting jnp/lax ops
@@ -6,35 +6,198 @@ This is the back end shared by every compiled target: it walks an
 code.  Nothing here runs per inference call; the walk is baked into the
 jaxpr.
 
+Ops lower through registered rules instead of a monolithic dispatch::
+
+    @register_lowering("my_op")
+    def _lower_my_op(node, ins, ctx):
+        return ctx.epilogue(node, some_jnp_expression(ins))
+
+A rule may be target-specific — ``register_lowering("dense",
+target="pallas")`` overrides the generic rule only when compiling for
+the ``"pallas"`` target, which is how the Pallas kernels plug in
+without a ``use_pallas`` flag threading through every signature.  The
+target rule consults the compile-time kernel selection
+(:mod:`repro.core.selection`) carried by the :class:`LoweringContext`,
+so shape-unfriendly nodes fall back to the generic lax path.
+
 ``execute_graph`` is a pure function of ``(graph, env, params)`` plus
-static lowering choices (``precision``, ``use_pallas``), so both the
-legacy ``CompiledModel`` shim and the ``repro.api`` targets call it.
+the static context (precision, target, batch size, selection), so both
+the legacy ``CompiledModel`` shim and the ``repro.api`` targets call it.
 """
 
 from __future__ import annotations
 
-from typing import Dict
+import dataclasses
+from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .graph import Graph, Node
-from .simple import _activation, _lax_padding, _pool_padding
-from ..kernels.fast_act import ref as fast_ref
+from .ops_common import (apply_activation, fast_activation, lax_padding,
+                         pool_padding)
+from ..kernels.decode_attention.ops import decode_attention as decode_attention_op
+from ..kernels.fast_act.ops import fast_act
 from ..kernels.fused_matmul.ops import fused_matmul
 
 
-def fast_activation(fn: str, x: jnp.ndarray, attrs: Dict) -> jnp.ndarray:
-    """The paper's §3.4 approximations; falls back to exact forms."""
-    if fn == "tanh":
-        return fast_ref.cf_tanh(x)
-    if fn == "sigmoid":
-        return fast_ref.cf_sigmoid(x)
-    if fn == "softmax":
-        return fast_ref.fast_softmax(x, axis=attrs.get("axis", -1))
-    if fn == "elu":
-        return jnp.where(x >= 0, x, fast_ref.schraudolph_exp(x) - 1.0)
-    return _activation(fn, x, attrs)
+class UnsupportedOpError(NotImplementedError):
+    """No lowering rule for an op — a structured diagnostic instead of a
+    bare ``NotImplementedError(op)``."""
+
+    def __init__(self, op: str, target: Optional[str]) -> None:
+        self.op = op
+        self.target = target
+        ops = registered_ops(target)
+        super().__init__(
+            f"no lowering rule for op {op!r}"
+            + (f" (target {target!r})" if target else "")
+            + f"; registered ops: {', '.join(ops)}. "
+            f"Add one with @register_lowering({op!r})"
+            + (f" or @register_lowering({op!r}, target={target!r})"
+               if target else "")
+        )
+
+
+@dataclasses.dataclass
+class LoweringContext:
+    """Static compile-time state threaded through every lowering rule.
+
+    ``batch_size`` is the explicit runtime batch the program is being
+    specialized for — rules must use it rather than peeking at some
+    other tensor's leading dimension (which crashes on input-free
+    prefixes and mis-broadcasts rank-1 tensors).
+    ``selection`` maps node names to the kernel selector's
+    :class:`~repro.core.selection.KernelChoice` for this compilation;
+    target rules honor it and fall back to the generic path when the
+    selector said so.
+    """
+
+    params: Mapping[str, jnp.ndarray]
+    batch_size: int = 1
+    precision: str = "exact"
+    target: Optional[str] = None
+    selection: Mapping[str, "KernelChoice"] = dataclasses.field(
+        default_factory=dict)
+
+    def act(self, fn: str, x: jnp.ndarray, attrs: Dict) -> jnp.ndarray:
+        if self.precision == "fast":
+            return fast_activation(fn, x, attrs)
+        return apply_activation(fn, x, attrs)
+
+    def epilogue(self, node: Node, y: jnp.ndarray) -> jnp.ndarray:
+        """Apply the node's fused epilogue: activation, then the folded
+        post-activation affine (paper §3.4/§3.5)."""
+        if node.epilogue and node.epilogue != "linear":
+            y = self.act(node.epilogue, y, node.epilogue_attrs)
+        pa = node.epilogue_attrs.get("post_affine")
+        if pa:
+            s, o = self.params[pa[0]], self.params[pa[1]]
+            y = y * s + o
+        return y
+
+    def wants(self, node: Node, kernel: str) -> bool:
+        """Did the selector pick ``kernel`` for this node?  Nodes absent
+        from the selection default to the target's native kernel, so
+        legacy callers that skip selection keep the old behavior."""
+        choice = self.selection.get(node.name)
+        return choice is None or choice.kernel == kernel
+
+
+LoweringRule = Callable[[Node, List[jnp.ndarray], LoweringContext], jnp.ndarray]
+
+#: (op, target) -> rule; target=None is the generic rule.
+_RULES: Dict[Tuple[str, Optional[str]], LoweringRule] = {}
+
+
+def register_lowering(
+    op: str, *, target: Optional[str] = None
+) -> Callable[[LoweringRule], LoweringRule]:
+    """Decorator: register the lowering rule for ``op`` (overwrites).
+    With ``target=``, the rule only applies when compiling for that
+    target and shadows the generic rule."""
+
+    def deco(rule: LoweringRule) -> LoweringRule:
+        _RULES[(op, target)] = rule
+        return rule
+
+    return deco
+
+
+def get_lowering(op: str, target: Optional[str] = None) -> LoweringRule:
+    """The rule for ``op`` under ``target``: target-specific override
+    first, generic rule otherwise."""
+    rule = _RULES.get((op, target)) or _RULES.get((op, None))
+    if rule is None:
+        raise UnsupportedOpError(op, target)
+    return rule
+
+
+def registered_ops(target: Optional[str] = None) -> Tuple[str, ...]:
+    """Ops lowerable under ``target`` (generic rules always count)."""
+    return tuple(sorted({op for op, t in _RULES if t in (None, target)}))
+
+
+_FILE_DIGESTS: Dict[str, str] = {}
+
+
+def _hash_code(h, code) -> None:
+    """Recursive, process-stable digest of a code object: bytecode,
+    referenced names, and nested code objects (a ``repr`` of co_consts
+    would embed memory addresses of nested lambdas/comprehensions and
+    change every run)."""
+    import types
+
+    h.update(code.co_code)
+    h.update(" ".join(code.co_names).encode())
+    for c in code.co_consts:
+        if isinstance(c, types.CodeType):
+            _hash_code(h, c)
+        else:
+            h.update(repr(c).encode())
+
+
+def _rule_token(rule) -> str:
+    """Per-rule digest: the defining module's source (so edits to
+    same-module helpers like ``_dense_impl`` count) plus the rule's own
+    recursive bytecode (so re-registering a different body from the same
+    file counts).  Helpers in *other* modules (e.g. the kernel bodies)
+    are outside this boundary — clear the cache dir when editing those
+    across an executable-cache-sharing fleet."""
+    import hashlib
+    import sys
+
+    h = hashlib.sha256()
+    mod = sys.modules.get(getattr(rule, "__module__", ""))
+    src_file = getattr(mod, "__file__", None)
+    if src_file:
+        if src_file not in _FILE_DIGESTS:
+            try:
+                with open(src_file, "rb") as f:
+                    _FILE_DIGESTS[src_file] = hashlib.sha256(
+                        f.read()).hexdigest()
+            except OSError:
+                _FILE_DIGESTS[src_file] = src_file
+        h.update(_FILE_DIGESTS[src_file].encode())
+    code = getattr(rule, "__code__", None)
+    if code is not None:
+        _hash_code(h, code)
+    return h.hexdigest()
+
+
+def lowering_fingerprint(target: Optional[str] = None) -> str:
+    """Digest of the rule set effective under ``target``, mixed into the
+    persistent executable-cache key: registering, removing, or editing a
+    rule (including a plug-in op's) changes the key instead of silently
+    serving a stale executable.  Deterministic across processes."""
+    import hashlib
+
+    h = hashlib.sha256()
+    for (op, t), rule in sorted(_RULES.items(),
+                                key=lambda kv: (kv[0][0], kv[0][1] or "")):
+        if t in (None, target):
+            h.update(f"{op}/{t}/{_rule_token(rule)}".encode())
+    return h.hexdigest()
 
 
 def execute_graph(
@@ -44,148 +207,242 @@ def execute_graph(
     *,
     precision: str = "exact",
     use_pallas: bool = False,
+    target: Optional[str] = None,
+    batch_size: Optional[int] = None,
+    selection: Optional[Mapping[str, "KernelChoice"]] = None,
 ) -> Dict[str, jnp.ndarray]:
-    """Trace the graph.  ``env`` maps input names to (traced) arrays."""
+    """Trace the graph.  ``env`` maps input names to (traced) arrays.
+
+    ``use_pallas`` is the legacy spelling of ``target="pallas"``.  If
+    ``batch_size`` is not given it is read off the first graph *input*
+    (never an arbitrary env entry).
+    """
+    if target is None:
+        target = "pallas" if use_pallas else "jit"
+    if batch_size is None:
+        for name in graph.inputs:
+            if name in env:
+                batch_size = env[name].shape[0]
+                break
+        else:
+            batch_size = 1
+    ctx = LoweringContext(
+        params=params,
+        batch_size=batch_size,
+        precision=precision,
+        target=target,
+        selection=selection or {},
+    )
     for node in graph.toposort():
-        env[node.output] = emit_node(
-            node, env, params, precision=precision, use_pallas=use_pallas
-        )
+        rule = get_lowering(node.op, target)
+        ins = [env[t] for t in node.inputs]
+        env[node.output] = rule(node, ins, ctx)
     return {name: env[name] for name in graph.outputs}
 
 
-def emit_node(
-    node: Node,
-    env: Dict[str, jnp.ndarray],
-    params,
-    *,
-    precision: str = "exact",
-    use_pallas: bool = False,
-) -> jnp.ndarray:
-    op = node.op
-    ins = [env[t] for t in node.inputs]
-    act = fast_activation if precision == "fast" else _activation
+# ---------------------------------------------------------------------------
+# Generic rules (every target)
+# ---------------------------------------------------------------------------
+@register_lowering("constant")
+def _lower_constant(node, ins, ctx):
+    v = ctx.params[node.params["value"]]
+    return jnp.broadcast_to(v, (ctx.batch_size,) + tuple(v.shape))
 
-    def epilogue(y):
-        if node.epilogue and node.epilogue != "linear":
-            y = act(node.epilogue, y, node.epilogue_attrs)
-        pa = node.epilogue_attrs.get("post_affine")
-        if pa:
-            s, o = params[pa[0]], params[pa[1]]
-            y = y * s + o
-        return y
 
-    if op == "constant":
-        batch = next(iter(env.values())).shape[0] if env else 1
-        v = params[node.params["value"]]
-        return jnp.broadcast_to(v, (batch,) + v.shape)
+def _dense_impl(node, ins, ctx, use_pallas: bool):
+    w = ctx.params[node.params["kernel"]]
+    b = ctx.params[node.params["bias"]] if "bias" in node.params else None
+    layout = node.attrs.get("kernel_layout", "io")
+    pa = node.epilogue_attrs.get("post_affine")
+    scale = ctx.params[pa[0]] if pa else None
+    offset = ctx.params[pa[1]] if pa else None
+    fn = node.epilogue if node.epilogue not in (None, "linear") else None
+    if fn == "softmax":
+        fn = None  # handled below (two-pass, not fusable in-kernel)
+    y = fused_matmul(
+        ins[0], w, b, scale, offset,
+        fn=fn,
+        fast=ctx.precision == "fast",
+        w_layout=layout,
+        use_pallas=use_pallas,
+        attrs=node.epilogue_attrs,
+    )
+    if "orig_cout" in node.attrs:
+        y = y[..., : node.attrs["orig_cout"]]
+    if node.epilogue == "softmax":
+        y = ctx.act("softmax", y, node.epilogue_attrs)
+    return y
 
-    if op == "dense":
-        w = params[node.params["kernel"]]
-        b = params[node.params["bias"]] if "bias" in node.params else None
-        layout = node.attrs.get("kernel_layout", "io")
-        pa = node.epilogue_attrs.get("post_affine")
-        scale = params[pa[0]] if pa else None
-        offset = params[pa[1]] if pa else None
-        fn = node.epilogue if node.epilogue not in (None, "linear") else None
-        if fn == "softmax":
-            fn = None  # handled below (two-pass, not fusable in-kernel)
-        y = fused_matmul(
-            ins[0], w, b, scale, offset,
-            fn=fn,
-            fast=precision == "fast",
-            w_layout=layout,
-            use_pallas=use_pallas,
-            attrs=node.epilogue_attrs,
-        )
-        if "orig_cout" in node.attrs:
-            y = y[..., : node.attrs["orig_cout"]]
-        if node.epilogue == "softmax":
-            y = act("softmax", y, node.epilogue_attrs)
-        return y
 
-    if op == "conv2d":
-        k = params[node.params["kernel"]]
-        y = jax.lax.conv_general_dilated(
-            ins[0], k,
-            window_strides=node.attrs["strides"],
-            padding=_lax_padding(node.attrs["padding"]),
-            dimension_numbers=("NHWC", "HWIO", "NHWC"),
-        )
-        if "bias" in node.params:
-            y = y + params[node.params["bias"]]
-        return epilogue(y)
+@register_lowering("dense")
+def _lower_dense(node, ins, ctx):
+    return _dense_impl(node, ins, ctx, use_pallas=False)
 
-    if op == "depthwise_conv2d":
-        k = params[node.params["kernel"]]
-        kh, kw, c, mult = k.shape
-        y = jax.lax.conv_general_dilated(
-            ins[0], k.reshape(kh, kw, 1, c * mult),
-            window_strides=node.attrs["strides"],
-            padding=_lax_padding(node.attrs["padding"]),
-            dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            feature_group_count=c,
-        )
-        if "bias" in node.params:
-            y = y + params[node.params["bias"]]
-        return epilogue(y)
 
-    if op == "batchnorm":
-        # Unfolded BN survives only when no adjacent foldable layer
-        # existed; emit the precomputed affine (scale/offset folded
-        # at compile time — cheaper than the 4-param formula).
-        gamma = params[node.params["gamma"]]
-        beta = params[node.params["beta"]]
-        mean = params[node.params["mean"]]
-        var = params[node.params["var"]]
-        eps = node.attrs["epsilon"]
-        s = gamma * jax.lax.rsqrt(var + eps)
-        o = beta - s * mean
-        return epilogue(ins[0] * s + o)
+@register_lowering("conv2d")
+def _lower_conv2d(node, ins, ctx):
+    k = ctx.params[node.params["kernel"]]
+    y = jax.lax.conv_general_dilated(
+        ins[0], k,
+        window_strides=node.attrs["strides"],
+        padding=lax_padding(node.attrs["padding"]),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if "bias" in node.params:
+        y = y + ctx.params[node.params["bias"]]
+    return ctx.epilogue(node, y)
 
-    if op == "activation":
-        return epilogue(act(node.attrs["fn"], ins[0], node.attrs))
 
-    if op == "maxpool2d":
-        y = jax.lax.reduce_window(
-            ins[0], -jnp.inf, jax.lax.max,
-            (1,) + tuple(node.attrs["pool_size"]) + (1,),
-            (1,) + tuple(node.attrs["strides"]) + (1,),
-            _pool_padding(node.attrs["padding"]),
-        )
-        return epilogue(y)
+@register_lowering("depthwise_conv2d")
+def _lower_depthwise_conv2d(node, ins, ctx):
+    k = ctx.params[node.params["kernel"]]
+    kh, kw, c, mult = k.shape
+    y = jax.lax.conv_general_dilated(
+        ins[0], k.reshape(kh, kw, 1, c * mult),
+        window_strides=node.attrs["strides"],
+        padding=lax_padding(node.attrs["padding"]),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    if "bias" in node.params:
+        y = y + ctx.params[node.params["bias"]]
+    return ctx.epilogue(node, y)
 
-    if op == "avgpool2d":
-        window = (1,) + tuple(node.attrs["pool_size"]) + (1,)
-        strides = (1,) + tuple(node.attrs["strides"]) + (1,)
-        pad = _pool_padding(node.attrs["padding"])
-        s = jax.lax.reduce_window(ins[0], 0.0, jax.lax.add, window, strides, pad)
-        ones = jnp.ones_like(ins[0])
-        nrm = jax.lax.reduce_window(ones, 0.0, jax.lax.add, window, strides, pad)
-        return epilogue(s / nrm)
 
-    if op == "global_avg_pool":
-        return epilogue(jnp.mean(ins[0], axis=(1, 2)))
+@register_lowering("batchnorm")
+def _lower_batchnorm(node, ins, ctx):
+    # Unfolded BN survives only when no adjacent foldable layer existed;
+    # emit the precomputed affine (scale/offset folded at compile time —
+    # cheaper than the 4-param formula).
+    gamma = ctx.params[node.params["gamma"]]
+    beta = ctx.params[node.params["beta"]]
+    mean = ctx.params[node.params["mean"]]
+    var = ctx.params[node.params["var"]]
+    eps = node.attrs["epsilon"]
+    s = gamma * jax.lax.rsqrt(var + eps)
+    o = beta - s * mean
+    return ctx.epilogue(node, ins[0] * s + o)
 
-    if op == "upsample2d":
-        f = node.attrs["factor"]
-        return epilogue(jnp.repeat(jnp.repeat(ins[0], f, axis=1), f, axis=2))
 
-    if op == "zero_pad2d":
-        (t, b), (l, r) = node.attrs["padding"]
-        return epilogue(jnp.pad(ins[0], ((0, 0), (t, b), (l, r), (0, 0))))
+@register_lowering("activation")
+def _lower_activation(node, ins, ctx):
+    return ctx.epilogue(node, ctx.act(node.attrs["fn"], ins[0], node.attrs))
 
-    if op == "add":
-        return epilogue(ins[0] + ins[1])
-    if op == "mul":
-        return epilogue(ins[0] * ins[1])
-    if op == "concat":
-        return epilogue(jnp.concatenate(ins, axis=node.attrs["axis"] + 1))
-    if op == "reshape":
-        return epilogue(
-            ins[0].reshape((ins[0].shape[0],) + tuple(node.attrs["shape"]))
-        )
-    if op == "flatten":
-        return epilogue(ins[0].reshape(ins[0].shape[0], -1))
-    if op == "softmax":
-        return epilogue(act("softmax", ins[0], node.attrs))
-    raise NotImplementedError(op)
+
+@register_lowering("maxpool2d")
+def _lower_maxpool2d(node, ins, ctx):
+    y = jax.lax.reduce_window(
+        ins[0], -jnp.inf, jax.lax.max,
+        (1,) + tuple(node.attrs["pool_size"]) + (1,),
+        (1,) + tuple(node.attrs["strides"]) + (1,),
+        pool_padding(node.attrs["padding"]),
+    )
+    return ctx.epilogue(node, y)
+
+
+@register_lowering("avgpool2d")
+def _lower_avgpool2d(node, ins, ctx):
+    window = (1,) + tuple(node.attrs["pool_size"]) + (1,)
+    strides = (1,) + tuple(node.attrs["strides"]) + (1,)
+    pad = pool_padding(node.attrs["padding"])
+    s = jax.lax.reduce_window(ins[0], 0.0, jax.lax.add, window, strides, pad)
+    ones = jnp.ones_like(ins[0])
+    nrm = jax.lax.reduce_window(ones, 0.0, jax.lax.add, window, strides, pad)
+    return ctx.epilogue(node, s / nrm)
+
+
+@register_lowering("global_avg_pool")
+def _lower_global_avg_pool(node, ins, ctx):
+    return ctx.epilogue(node, jnp.mean(ins[0], axis=(1, 2)))
+
+
+@register_lowering("upsample2d")
+def _lower_upsample2d(node, ins, ctx):
+    f = node.attrs["factor"]
+    return ctx.epilogue(node, jnp.repeat(jnp.repeat(ins[0], f, axis=1), f, axis=2))
+
+
+@register_lowering("zero_pad2d")
+def _lower_zero_pad2d(node, ins, ctx):
+    (t, b), (l, r) = node.attrs["padding"]
+    return ctx.epilogue(node, jnp.pad(ins[0], ((0, 0), (t, b), (l, r), (0, 0))))
+
+
+@register_lowering("add")
+def _lower_add(node, ins, ctx):
+    return ctx.epilogue(node, ins[0] + ins[1])
+
+
+@register_lowering("mul")
+def _lower_mul(node, ins, ctx):
+    return ctx.epilogue(node, ins[0] * ins[1])
+
+
+@register_lowering("concat")
+def _lower_concat(node, ins, ctx):
+    return ctx.epilogue(node, jnp.concatenate(ins, axis=node.attrs["axis"] + 1))
+
+
+@register_lowering("reshape")
+def _lower_reshape(node, ins, ctx):
+    return ctx.epilogue(
+        node, ins[0].reshape((ins[0].shape[0],) + tuple(node.attrs["shape"]))
+    )
+
+
+@register_lowering("flatten")
+def _lower_flatten(node, ins, ctx):
+    return ctx.epilogue(node, ins[0].reshape(ins[0].shape[0], -1))
+
+
+@register_lowering("softmax")
+def _lower_softmax(node, ins, ctx):
+    return ctx.epilogue(node, ctx.act("softmax", ins[0], node.attrs))
+
+
+def _decode_attention_impl(node, ins, ctx, use_pallas: bool):
+    lengths = ins[3] if len(ins) > 3 else None
+    y = decode_attention_op(
+        ins[0], ins[1], ins[2], lengths,
+        scale=node.attrs.get("scale"),
+        fast=ctx.precision == "fast",
+        use_pallas=use_pallas,
+    )
+    return ctx.epilogue(node, y)
+
+
+@register_lowering("decode_attention")
+def _lower_decode_attention(node, ins, ctx):
+    return _decode_attention_impl(node, ins, ctx, use_pallas=False)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-target overrides: the fused kernels register themselves as
+# lowering rules; the kernel selector's per-node decision picks between
+# the Pallas kernel and the generic lax path.
+# ---------------------------------------------------------------------------
+@register_lowering("dense", target="pallas")
+def _lower_dense_pallas(node, ins, ctx):
+    return _dense_impl(node, ins, ctx,
+                       use_pallas=ctx.wants(node, "pallas.fused_matmul"))
+
+
+@register_lowering("activation", target="pallas")
+def _lower_activation_pallas(node, ins, ctx):
+    # Unlike dense (whose Pallas kernel is this target's native path),
+    # the fast_act kernel is only used when the selector explicitly
+    # picked it — on CPU its interpret mode would lose to the jnp
+    # reference, and the reference is the §3.4 semantics either way.
+    choice = ctx.selection.get(node.name)
+    if (ctx.precision == "fast" and choice is not None
+            and choice.kernel == "pallas.fast_act"):
+        return ctx.epilogue(node, fast_act(ins[0], node.attrs["fn"],
+                                           use_pallas=True))
+    return _lower_activation(node, ins, ctx)
+
+
+@register_lowering("decode_attention", target="pallas")
+def _lower_decode_attention_pallas(node, ins, ctx):
+    return _decode_attention_impl(
+        node, ins, ctx,
+        use_pallas=ctx.wants(node, "pallas.decode_attention"))

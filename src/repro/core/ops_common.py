@@ -1,0 +1,70 @@
+"""Op helpers shared by the SimpleNN oracle and the lowering rules.
+
+Exactly one copy of the activation table and the padding-normalization
+helpers exists; ``core.simple`` (the oracle) and ``core.lowering`` (the
+registry-driven back end) both import from here, so an activation added
+for one is automatically exact-checked against the other.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+
+def lax_padding(padding):
+    """'same'/'valid' -> lax string form; explicit ((t,b),(l,r)) -> pairs."""
+    if isinstance(padding, str):
+        return padding.upper()
+    (t, b), (l, r) = padding
+    return [(t, b), (l, r)]
+
+
+def pool_padding(padding):
+    """Padding for ``reduce_window`` over NHWC: unlike conv, explicit
+    padding must name all four dims, not just the spatial pair."""
+    p = lax_padding(padding)
+    if isinstance(p, str):
+        return p
+    return [(0, 0), *p, (0, 0)]
+
+
+def apply_activation(fn: str, x: jnp.ndarray, attrs: Dict) -> jnp.ndarray:
+    """The exact activation semantics (oracle and compiled paths alike)."""
+    if fn == "linear":
+        return x
+    if fn == "relu":
+        return jnp.maximum(x, 0.0)
+    if fn == "relu6":
+        return jnp.clip(x, 0.0, 6.0)
+    if fn == "leaky_relu":
+        alpha = attrs.get("alpha", 0.01)
+        return jnp.where(x >= 0, x, alpha * x)
+    if fn == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if fn == "tanh":
+        return jnp.tanh(x)
+    if fn == "elu":
+        return jnp.where(x >= 0, x, jnp.expm1(x))
+    if fn == "hard_sigmoid":
+        return jnp.clip(x * 0.2 + 0.5, 0.0, 1.0)
+    if fn == "softmax":
+        return jax.nn.softmax(x, axis=attrs.get("axis", -1))
+    raise NotImplementedError(fn)
+
+
+def fast_activation(fn: str, x: jnp.ndarray, attrs: Dict) -> jnp.ndarray:
+    """The paper's §3.4 approximations; falls back to exact forms."""
+    from ..kernels.fast_act import ref as fast_ref
+
+    if fn == "tanh":
+        return fast_ref.cf_tanh(x)
+    if fn == "sigmoid":
+        return fast_ref.cf_sigmoid(x)
+    if fn == "softmax":
+        return fast_ref.fast_softmax(x, axis=attrs.get("axis", -1))
+    if fn == "elu":
+        return jnp.where(x >= 0, x, fast_ref.schraudolph_exp(x) - 1.0)
+    return apply_activation(fn, x, attrs)

@@ -1,81 +1,90 @@
-"""Compiler passes over the graph IR.
+"""Compiler passes over the graph IR — a registry, not a list.
 
-Pipeline order mirrors the paper's intermediate processing (§3.2/§3.5):
+Each pass is a pure function ``Graph -> (Graph, stats)`` that registers
+itself with ordering constraints::
 
-1. canonicalize      — normalize ops (flatten→reshape, lone softmax→activation)
-2. fold_constants    — precompute weight-only subgraphs
-3. fuse_pad          — merge zero_pad2d into the following conv (fewer passes)
-4. fuse_activation   — activations become epilogues of producers (§3.4)
-5. fold_batchnorm    — BN folded into adjacent conv/dense (§3.5); runs after
-                       activation fusion so the conv→act→BN pattern can fold
-                       as a post-activation affine epilogue, as the paper does
-6. optimize_layout   — compile-time weight re-layout (Eq. 3 analogue) (§3.3)
-7. plan_memory       — lifetime analysis + arena assignment, in-place reuse (§3.2)
+    @register_pass("fuse_activation", after=("canonicalize",),
+                   before=("fold_batchnorm",))
+    def fuse_activation(graph): ...
 
-Each pass is a pure function Graph -> Graph (plus optional report).
-``run_pipeline`` applies them and returns (graph, report dict).
+:class:`PassManager` resolves the constraints into a pipeline, re-runs
+shape inference as a verifier after every pass, and records per-pass
+timings and node deltas in the compile report (see ``manager.py``).
+
+The default pipeline mirrors the paper's intermediate processing
+(§3.2/§3.5):
+
+1. canonicalize           — normalize ops (flatten→reshape, lone softmax→activation)
+2. fold_constants         — precompute weight-only subgraphs
+3. fuse_pad               — merge zero_pad2d into the following conv
+4. fuse_activation        — activations become epilogues of producers (§3.4)
+5. fold_batchnorm         — BN folded into adjacent conv/dense (§3.5)
+6. fuse_activation.post_bn — rerun: BN removal exposes new conv→act pairs
+7. optimize_layout        — compile-time weight re-layout (Eq. 3 analogue) (§3.3)
+
+followed by ``plan_memory`` (lifetime analysis + arena assignment,
+§3.2), which is an analysis over the final graph rather than a rewrite,
+so the manager runs it as the pipeline finalizer.
+
+``run_pipeline(graph, passes)`` remains as the functional wrapper every
+call site uses; ``passes=None`` means the resolved default pipeline.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 from ..graph import Graph
+from .manager import (PassManager, PassOrderingError, PassVerificationError,
+                      register_pass, registered_passes, resolve_order,
+                      unregister_pass)
+
+# Importing a pass module registers it; import order is the tie-break
+# order for constraint resolution.
 from .canonicalize import canonicalize
 from .fold_constants import fold_constants
-from .fold_batchnorm import fold_batchnorm
 from .fuse_pad import fuse_pad
 from .fuse_activation import fuse_activation
-from .memory_plan import MemoryPlan, plan_memory
+from .fold_batchnorm import fold_batchnorm
 from .layout import optimize_layout
+from .memory_plan import MemoryPlan, plan_memory
 
-# fuse_activation runs twice: once so the conv→act→BN pattern folds as a
-# post-activation affine (paper §3.5), and once more because BN removal
-# exposes new conv→act adjacencies (conv→BN→act becomes conv→act).
-DEFAULT_PIPELINE = (
-    "canonicalize",
-    "fold_constants",
-    "fuse_pad",
-    "fuse_activation",
-    "fold_batchnorm",
-    "fuse_activation",
-    "optimize_layout",
-)
+# Second instance of activation fusion, scheduled after BN folding (the
+# same function object; ``.post_bn`` marks the instance, the base name
+# stays "fuse_activation" so ablations remove both at once).
+register_pass("fuse_activation.post_bn", after=("fold_batchnorm",),
+              before=("optimize_layout",))(fuse_activation)
 
-_PASSES = {
-    "canonicalize": canonicalize,
-    "fold_constants": fold_constants,
-    "fuse_pad": fuse_pad,
-    "fold_batchnorm": fold_batchnorm,
-    "fuse_activation": fuse_activation,
-    "optimize_layout": optimize_layout,
-}
+#: The resolved default pipeline (instance names, in execution order).
+DEFAULT_PIPELINE: Tuple[str, ...] = resolve_order()
 
 
 def run_pipeline(
     graph: Graph,
-    passes: Optional[Tuple[str, ...]] = None,
+    passes: Optional[Sequence[str]] = None,
+    *,
+    verify: bool = True,
+    dump_ir: Optional[str] = None,
 ) -> Tuple[Graph, Dict]:
     """Run the pass pipeline; returns the optimized graph and a report
-    with per-pass statistics plus the memory plan."""
-    report: Dict = {"passes": []}
-    g = graph.copy()
-    for name in passes if passes is not None else DEFAULT_PIPELINE:
-        before = len(g.nodes)
-        g, stats = _PASSES[name](g)
-        g.rebuild_index()
-        report["passes"].append(
-            {"pass": name, "nodes_before": before, "nodes_after": len(g.nodes), **stats}
-        )
-    plan = plan_memory(g)
-    report["memory_plan"] = plan.stats()
-    report["plan"] = plan
-    return g, report
+    with per-pass statistics plus the memory plan.
+
+    ``passes=None`` runs the registry-resolved default; an explicit
+    sequence of names runs exactly those, in that order.
+    """
+    return PassManager(passes, verify=verify, dump_ir=dump_ir).run(graph)
 
 
 __all__ = [
     "run_pipeline",
     "DEFAULT_PIPELINE",
+    "PassManager",
+    "PassOrderingError",
+    "PassVerificationError",
+    "register_pass",
+    "registered_passes",
+    "resolve_order",
+    "unregister_pass",
     "canonicalize",
     "fold_constants",
     "fold_batchnorm",

@@ -7,8 +7,10 @@ from __future__ import annotations
 from typing import Dict, Tuple
 
 from ..graph import Graph
+from .manager import register_pass
 
 
+@register_pass("canonicalize")
 def canonicalize(graph: Graph) -> Tuple[Graph, Dict]:
     g = graph.copy()
     specs = g.infer_shapes()

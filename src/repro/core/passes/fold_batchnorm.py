@@ -34,6 +34,7 @@ from typing import Dict, Tuple
 import numpy as np
 
 from ..graph import Graph, Node
+from .manager import register_pass
 
 
 def _bn_scale_offset(g: Graph, bn: Node) -> Tuple[np.ndarray, np.ndarray]:
@@ -94,6 +95,7 @@ def _scale_input_channels(g: Graph, node: Node, s: np.ndarray, o: np.ndarray) ->
         node.params["bias"] = bname
 
 
+@register_pass("fold_batchnorm", after=("canonicalize",))
 def fold_batchnorm(graph: Graph) -> Tuple[Graph, Dict]:
     g = graph.copy()
     folded_after = folded_before = affine_epilogue = 0

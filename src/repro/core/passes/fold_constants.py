@@ -14,8 +14,10 @@ import numpy as np
 
 from ..graph import Graph
 from ..simple import SimpleNN
+from .manager import register_pass
 
 
+@register_pass("fold_constants", after=("canonicalize",))
 def fold_constants(graph: Graph) -> Tuple[Graph, Dict]:
     g = graph.copy()
     # Tensors that are compile-time constants: params referenced via

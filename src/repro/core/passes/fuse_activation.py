@@ -16,10 +16,17 @@ from typing import Dict, Tuple
 
 from ..graph import ACTIVATIONS, Graph
 from .fold_batchnorm import _remove_node
+from .manager import register_pass
 
 FUSABLE_PRODUCERS = ("conv2d", "depthwise_conv2d", "dense")
 
 
+# Registered twice (see passes/__init__): once before BN folding so the
+# conv→act→BN pattern can fold as a post-activation affine (§3.5), and
+# once after as "fuse_activation.post_bn", because BN removal exposes
+# new conv→act adjacencies (conv→BN→act becomes conv→act).
+@register_pass("fuse_activation", after=("canonicalize",),
+               before=("fold_batchnorm",))
 def fuse_activation(graph: Graph) -> Tuple[Graph, Dict]:
     g = graph.copy()
     fused = 0

@@ -12,8 +12,10 @@ from __future__ import annotations
 from typing import Dict, Tuple
 
 from ..graph import Graph
+from .manager import register_pass
 
 
+@register_pass("fuse_pad", after=("canonicalize",))
 def fuse_pad(graph: Graph) -> Tuple[Graph, Dict]:
     g = graph.copy()
     fused = 0

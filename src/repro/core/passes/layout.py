@@ -30,11 +30,13 @@ from typing import Dict, Tuple
 import numpy as np
 
 from ..graph import Graph
+from ...kernels.tiles import LANE, SUBLANE, ceil_to
+from .manager import register_pass
 
 #: Channel alignment for the MXU lane dimension.
-LANE_ALIGN = 128
+LANE_ALIGN = LANE
 #: Sublane alignment for f32.
-SUBLANE_ALIGN = 8
+SUBLANE_ALIGN = SUBLANE
 #: Pad only if the relative overhead stays below this bound — padding a
 #: 3-channel tensor to 128 would be a 42x blowup, which no sane compiler
 #: does.  (CompiledNN similarly specializes per-dimension-case instead
@@ -42,10 +44,10 @@ SUBLANE_ALIGN = 8
 MAX_PAD_RATIO = 1.5
 
 
-def _pad_to(n: int, align: int) -> int:
-    return -(-n // align) * align
+_pad_to = ceil_to
 
 
+@register_pass("optimize_layout", after=("fold_batchnorm",))
 def optimize_layout(graph: Graph) -> Tuple[Graph, Dict]:
     g = graph.copy()
     specs = g.infer_shapes()

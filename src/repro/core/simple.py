@@ -18,46 +18,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import Graph, Node
+from .ops_common import apply_activation, lax_padding, pool_padding
 
-
-def _lax_padding(padding):
-    """'same'/'valid' -> lax string form; explicit ((t,b),(l,r)) -> pairs."""
-    if isinstance(padding, str):
-        return padding.upper()
-    (t, b), (l, r) = padding
-    return [(t, b), (l, r)]
-
-
-def _pool_padding(padding):
-    """Padding for ``reduce_window`` over NHWC: unlike conv, explicit
-    padding must name all four dims, not just the spatial pair."""
-    p = _lax_padding(padding)
-    if isinstance(p, str):
-        return p
-    return [(0, 0), *p, (0, 0)]
-
-
-def _activation(fn: str, x: jnp.ndarray, attrs: Dict) -> jnp.ndarray:
-    if fn == "linear":
-        return x
-    if fn == "relu":
-        return jnp.maximum(x, 0.0)
-    if fn == "relu6":
-        return jnp.clip(x, 0.0, 6.0)
-    if fn == "leaky_relu":
-        alpha = attrs.get("alpha", 0.01)
-        return jnp.where(x >= 0, x, alpha * x)
-    if fn == "sigmoid":
-        return jax.nn.sigmoid(x)
-    if fn == "tanh":
-        return jnp.tanh(x)
-    if fn == "elu":
-        return jnp.where(x >= 0, x, jnp.expm1(x))
-    if fn == "hard_sigmoid":
-        return jnp.clip(x * 0.2 + 0.5, 0.0, 1.0)
-    if fn == "softmax":
-        return jax.nn.softmax(x, axis=attrs.get("axis", -1))
-    raise NotImplementedError(fn)
+# Compat aliases: the padding/activation helpers moved to ops_common so
+# the oracle and the lowering registry share one copy.
+_activation = apply_activation
+_lax_padding = lax_padding
+_pool_padding = pool_padding
 
 
 class SimpleNN:
@@ -70,6 +37,7 @@ class SimpleNN:
     def __init__(self, graph: Graph):
         self.graph = graph
         self.specs = graph.infer_shapes()
+        self._jnp_params = None  # lazy, for the plugin-op fallback only
 
     def __call__(self, **inputs: jnp.ndarray) -> Dict[str, jnp.ndarray]:
         env: Dict[str, jnp.ndarray] = {}
@@ -82,8 +50,17 @@ class SimpleNN:
                     f"input {name!r}: expected (batch,)+{spec.shape}, got {x.shape}"
                 )
             env[name] = x
+        # Weights may be rewritten between calls (random_params_like,
+        # pass experiments); drop the plugin-fallback memo so plug-in
+        # ops see the same live params as the built-in ops.
+        self._jnp_params = None
+        # The batch size is read off the declared graph inputs once, not
+        # inferred from arbitrary env entries mid-walk (which crashes on
+        # input-free prefixes and mis-broadcasts rank-1 tensors).
+        batch = next(
+            (env[n].shape[0] for n in self.graph.inputs if n in env), 1)
         for node in self.graph.toposort():
-            env[node.output] = self._eval(node, env)
+            env[node.output] = self._eval(node, env, batch)
             # SimpleNN never fuses: if a pass attached an epilogue we
             # still apply it, but as a separate elementwise step.
             if node.epilogue and node.epilogue != "linear":
@@ -93,13 +70,13 @@ class SimpleNN:
         return {name: env[name] for name in self.graph.outputs}
 
     # ------------------------------------------------------------------
-    def _eval(self, node: Node, env: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    def _eval(self, node: Node, env: Dict[str, jnp.ndarray],
+              batch: int = 1) -> jnp.ndarray:
         g = self.graph
         op = node.op
         ins = [env[t] for t in node.inputs]
         if op == "constant":
             # Broadcast the constant over the batch dimension.
-            batch = next(iter(env.values())).shape[0] if env else 1
             v = jnp.asarray(g.params[node.params["value"]])
             return jnp.broadcast_to(v, (batch,) + v.shape)
         if op == "conv2d":
@@ -183,7 +160,28 @@ class SimpleNN:
             return ins[0].reshape(ins[0].shape[0], -1)
         if op == "softmax":
             return jax.nn.softmax(ins[0], axis=node.attrs["axis"])
-        raise NotImplementedError(op)
+        if op == "decode_attention":
+            from ..kernels.decode_attention import ref as attn_ref
+            lengths = ins[3] if len(ins) > 3 else None
+            return attn_ref.decode_attention_ref(
+                ins[0], ins[1], ins[2], lengths,
+                scale=node.attrs.get("scale"))
+        # Plug-in ops (register_op + @register_lowering): the oracle
+        # falls back to the *generic* lowering rule in exact precision,
+        # so one registered rule covers all three targets.  The rule is
+        # handed an epilogue-free view of the node — the __call__ loop
+        # applies epilogues as a separate step (SimpleNN never fuses),
+        # and a rule that calls ctx.epilogue must not apply it twice.
+        import dataclasses as _dc
+
+        from .lowering import LoweringContext, get_lowering
+        rule = get_lowering(op, None)
+        if self._jnp_params is None:
+            self._jnp_params = {k: jnp.asarray(v)
+                                for k, v in g.params.items()}
+        ctx = LoweringContext(params=self._jnp_params, batch_size=batch)
+        bare = _dc.replace(node, epilogue=None, epilogue_attrs={})
+        return rule(bare, ins, ctx)
 
 
 def random_params_like(graph: Graph, seed: int = 0) -> None:

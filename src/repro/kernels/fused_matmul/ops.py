@@ -9,15 +9,20 @@ by test (tests/test_kernels.py sweeps shapes × epilogues).
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import ref
 from .kernel import fused_matmul_p
+from ..tiles import pick_block
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
+
+#: Compat alias: block choice moved to kernels.tiles so the compile-time
+#: kernel selector reasons about exactly the blocks used here.
+_pick_block = pick_block
 
 
 def _pad_to(a: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
@@ -26,15 +31,6 @@ def _pad_to(a: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
     if p0 or p1:
         a = jnp.pad(a, ((0, p0), (0, p1)))
     return a
-
-
-def _pick_block(m: int, k: int, n: int) -> Tuple[int, int, int]:
-    """VMEM-aware block choice: x(bm,bk) + w(bk,bn) + acc/out(bm,bn)
-    in f32 must fit well under ~16 MiB VMEM; keep MXU-aligned."""
-    bm = min(256, -(-m // 8) * 8)
-    bn = min(256, -(-n // 128) * 128)
-    bk = min(512, -(-k // 128) * 128)
-    return bm, bk, bn
 
 
 def fused_matmul(

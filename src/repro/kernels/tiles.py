@@ -1,0 +1,34 @@
+"""TPU tile geometry shared by the kernels and the kernel selector.
+
+One source of truth for the hardware granules the Pallas kernels tile
+against, so the compile-time selector (``repro.core.selection``) reasons
+about exactly the blocks the kernels will use.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+#: MXU/VPU lane width (minor-most dim granule for f32).
+LANE = 128
+#: Sublane granule for f32 (second-minor dim).
+SUBLANE = 8
+#: Per-core VMEM the block working set must fit well under (~16 MiB on
+#: current TPUs; the budget is the full size — callers compare their
+#: resident tiles against it).
+VMEM_BUDGET_BYTES = 16 * 1024 * 1024
+
+
+def ceil_to(n: int, align: int) -> int:
+    """Round ``n`` up to a multiple of ``align`` (the one copy of the
+    granule-rounding convention)."""
+    return -(-n // align) * align
+
+
+def pick_block(m: int, k: int, n: int) -> Tuple[int, int, int]:
+    """VMEM-aware block choice for the fused matmul: x(bm,bk) + w(bk,bn)
+    + acc/out(bm,bn) in f32 must fit well under VMEM; keep MXU-aligned."""
+    bm = min(256, ceil_to(m, SUBLANE))
+    bn = min(256, ceil_to(n, LANE))
+    bk = min(512, ceil_to(k, LANE))
+    return bm, bk, bn

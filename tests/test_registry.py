@@ -1,0 +1,378 @@
+"""The registry-driven middle end: pass ordering + verification via
+PassManager, per-op lowering rules with target overrides, and the
+shape-aware kernel selector."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro.api import CompileOptions
+from repro.core import (Graph, ModelBuilder, SimpleNN, UnsupportedOpError,
+                        execute_graph, register_lowering, select_kernels)
+from repro.core.graph import OPS
+from repro.core.lowering import _RULES, get_lowering, registered_ops
+from repro.core.passes import (DEFAULT_PIPELINE, PassManager,
+                               PassOrderingError, PassVerificationError,
+                               register_pass, unregister_pass, run_pipeline)
+
+
+def _cnn(seed=0):
+    mb = ModelBuilder().seed(seed)
+    x = mb.input((8, 8, 3))
+    h = mb.conv2d(x, 8, (3, 3), activation="relu")
+    h = mb.batchnorm(h)
+    h = mb.global_avg_pool(h)
+    h = mb.dense(h, 10)
+    out = mb.softmax(h)
+    return mb.build([out]), out
+
+
+# ---------------------------------------------------------------------------
+# Pass layer: ordering resolution, ablation surgery, verifier
+# ---------------------------------------------------------------------------
+def test_default_pipeline_resolution_matches_legacy_order():
+    assert DEFAULT_PIPELINE == (
+        "canonicalize", "fold_constants", "fuse_pad", "fuse_activation",
+        "fold_batchnorm", "fuse_activation.post_bn", "optimize_layout")
+
+
+def test_explicit_pipeline_allows_base_names_and_duplicates():
+    pm = PassManager(("canonicalize", "fuse_activation", "fold_batchnorm",
+                      "fuse_activation"))
+    assert pm.pipeline == ("canonicalize", "fuse_activation",
+                           "fold_batchnorm", "fuse_activation")
+    with pytest.raises(KeyError, match="unknown pass"):
+        PassManager(("no_such_pass",))
+
+
+def test_without_removes_every_instance():
+    pm = PassManager.default().without("fuse_activation")
+    assert "fuse_activation" not in pm.pipeline
+    assert "fuse_activation.post_bn" not in pm.pipeline
+    # and the surgery is non-destructive
+    assert "fuse_activation" in PassManager.default().pipeline
+
+
+def test_with_pass_inserts():
+    pm = PassManager(("canonicalize",)).with_pass("optimize_layout")
+    assert pm.pipeline == ("canonicalize", "optimize_layout")
+
+
+def test_ordering_cycle_is_a_clear_error():
+    register_pass("cyc_a", before=("cyc_b",))(lambda g: (g, {}))
+    register_pass("cyc_b", before=("cyc_a",))(lambda g: (g, {}))
+    try:
+        with pytest.raises(PassOrderingError, match="cycle"):
+            PassManager.default()
+    finally:
+        unregister_pass("cyc_a")
+        unregister_pass("cyc_b")
+
+
+def test_verifier_rejects_shape_breaking_pass():
+    def break_shapes(g):
+        g = g.copy()
+        # Re-point the model output at an intermediate tensor with a
+        # different shape — exactly the sort of silent corruption the
+        # per-pass verifier exists to catch.
+        g.outputs = [g.nodes[0].output]
+        return g, {}
+
+    register_pass("break_shapes")(break_shapes)
+    try:
+        g, _ = _cnn()
+        with pytest.raises(PassVerificationError, match="break_shapes"):
+            run_pipeline(g, ("canonicalize", "break_shapes"))
+    finally:
+        unregister_pass("break_shapes")
+
+
+def test_verifier_rejects_invalid_graph():
+    def dangle(g):
+        g = g.copy()
+        g.nodes[-1].inputs = ["tensor_that_does_not_exist"]
+        return g, {}
+
+    register_pass("dangle")(dangle)
+    try:
+        g, _ = _cnn()
+        with pytest.raises(PassVerificationError, match="dangle"):
+            run_pipeline(g, ("dangle",))
+    finally:
+        unregister_pass("dangle")
+
+
+def test_report_carries_pipeline_and_timings():
+    g, _ = _cnn()
+    _, report = run_pipeline(g)
+    assert report["pipeline"] == DEFAULT_PIPELINE
+    assert [p["pass"] for p in report["passes"]] == list(DEFAULT_PIPELINE)
+    assert all(p["time_ms"] >= 0 for p in report["passes"])
+
+
+def test_dump_ir_writes_stage_files(tmp_path):
+    g, _ = _cnn()
+    exe = repro.compile(g, CompileOptions(dump_ir=str(tmp_path)))
+    exe.ensure_compiled(1)
+    names = sorted(p.name for p in tmp_path.iterdir())
+    assert names[0] == "00-input.txt"
+    assert f"{len(DEFAULT_PIPELINE):02d}-optimize_layout.txt" in names
+    assert "Graph:" in (tmp_path / "00-input.txt").read_text()
+
+
+# ---------------------------------------------------------------------------
+# Lowering layer: rule registry, target overrides, diagnostics
+# ---------------------------------------------------------------------------
+def test_unsupported_op_is_a_structured_diagnostic():
+    with pytest.raises(UnsupportedOpError) as ei:
+        get_lowering("mystery_op", "pallas")
+    msg = str(ei.value)
+    assert "mystery_op" in msg and "pallas" in msg
+    assert "registered ops" in msg and "dense" in msg
+    assert "register_lowering" in msg
+    assert isinstance(ei.value, NotImplementedError)  # legacy contract
+
+
+def test_register_lowering_with_target_override(monkeypatch, rng):
+    monkeypatch.setitem(OPS, "scale2", ())
+
+    @register_lowering("scale2")
+    def _generic(node, ins, ctx):
+        return ins[0] * 2.0
+
+    @register_lowering("scale2", target="weird")
+    def _weird(node, ins, ctx):
+        return ins[0] * 3.0
+
+    try:
+        assert "scale2" in registered_ops()
+        g = Graph()
+        g.add_input("x", (4,))
+        g.add_node("scale2", "s", ["x"])
+        g.set_outputs(["s:out"])
+        x = jnp.asarray(rng.standard_normal((2, 4)).astype(np.float32))
+        out = execute_graph(g, {"x": x}, {}, target="jit")["s:out"]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 2.0)
+        out = execute_graph(g, {"x": x}, {}, target="weird")["s:out"]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(x) * 3.0)
+    finally:
+        _RULES.pop(("scale2", None))
+        _RULES.pop(("scale2", "weird"))
+
+
+@pytest.mark.parametrize("case", ["dense_act", "conv_bn", "tiny_dense"])
+def test_golden_interpret_jit_pallas(case, rng):
+    mb = ModelBuilder().seed(7)
+    x = mb.input((6, 6, 3))
+    if case == "dense_act":
+        out = mb.dense(mb.flatten(x), 9, activation="tanh")
+    elif case == "conv_bn":
+        h = mb.conv2d(x, 5, (3, 3), activation="relu")
+        out = mb.batchnorm(h)
+    else:  # tiny_dense: the selector's lax fallback path on pallas
+        out = mb.dense(mb.dense(mb.global_avg_pool(x), 1), 1)
+    g = mb.build([out])
+    xv = rng.standard_normal((2, 6, 6, 3)).astype(np.float32)
+    outs = {
+        t: np.asarray(repro.compile(g, CompileOptions(target=t))(input=xv)[out])
+        for t in ("interpret", "jit", "pallas")
+    }
+    np.testing.assert_allclose(outs["interpret"], outs["jit"],
+                               rtol=2e-5, atol=2e-6)
+    np.testing.assert_allclose(outs["interpret"], outs["pallas"],
+                               rtol=2e-5, atol=2e-6)
+
+
+def test_constant_broadcast_uses_explicit_batch(rng):
+    # The input feeds a *later* node than the constant — batch size must
+    # come from the lowering context, not from peeking at env entries.
+    g = Graph()
+    g.add_input("x", (4,))
+    g.add_param("c", np.arange(4, dtype=np.float32))
+    g.add_node("constant", "const", [], params={"value": "c"})
+    g.add_node("activation", "act", ["const:out"], attrs={"fn": "relu"})
+    g.add_node("add", "sum", ["act:out", "x"])
+    g.set_outputs(["sum:out"])
+    want_c = np.maximum(np.arange(4, dtype=np.float32), 0.0)
+    for target in ("interpret", "jit", "pallas"):
+        for batch in (1, 3):
+            x = rng.standard_normal((batch, 4)).astype(np.float32)
+            out = repro.compile(g, CompileOptions(target=target))(x=x)["sum:out"]
+            np.testing.assert_allclose(np.asarray(out), x + want_c,
+                                       rtol=1e-6, err_msg=f"{target}/{batch}")
+
+
+# ---------------------------------------------------------------------------
+# Selection layer: static shape-based kernel choice, surfaced decisions
+# ---------------------------------------------------------------------------
+def test_selector_picks_pallas_for_real_dense_and_lax_for_degenerate():
+    mb = ModelBuilder().seed(0)
+    x = mb.input((32,))
+    h = mb.dense(x, 8)
+    out = mb.dense(h, 1)  # 8x1: sub-granule, ~2000x lane-padding waste
+    g = mb.build([out])
+    sel = select_kernels(g, batch_size=1, target="pallas")
+    kinds = {c.node: c.kernel for c in sel.values()}
+    assert kinds["dense_1"] == "pallas.fused_matmul"
+    assert kinds["dense_2"] == "lax.dot"
+    assert "waste" in sel["dense_2"].reason
+
+
+def test_selector_is_empty_off_pallas():
+    g, _ = _cnn()
+    assert select_kernels(g, batch_size=1, target="jit") == {}
+
+
+def test_cost_summary_surfaces_kernel_selection(rng):
+    g, out = _cnn()
+    exe = repro.compile(g, CompileOptions(target="pallas"))
+    x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+    exe(input=x)
+    cost = exe.cost_summary()
+    sel = cost["kernel_selection"][2]
+    dense = [c for c in sel if c["op"] == "dense"]
+    assert dense and dense[0]["kernel"] == "pallas.fused_matmul"
+    assert dense[0]["reason"]
+    # the jit target records no kernel decisions
+    jit_exe = repro.compile(g, CompileOptions(target="jit"))
+    jit_exe(input=x)
+    assert "kernel_selection" not in jit_exe.cost_summary() or \
+        all(not v for v in jit_exe.cost_summary()["kernel_selection"].values())
+
+
+# ---------------------------------------------------------------------------
+# decode_attention: the new op lowers via registered rules on all targets
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("d", [64, 128], ids=["d64-ref", "d128-pallas"])
+def test_decode_attention_targets_agree(d, rng):
+    b, h, hkv, s = 2, 4, 2, 16
+    mb = ModelBuilder()
+    q = mb.input((h, d), name="q")
+    k = mb.input((s, hkv, d), name="k")
+    v = mb.input((s, hkv, d), name="v")
+    lens = mb.input((), name="lens", dtype="int32")
+    out = mb.decode_attention(q, k, v, lens)
+    g = mb.build([out])
+
+    qv = rng.standard_normal((b, h, d)).astype(np.float32)
+    kv = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    vv = rng.standard_normal((b, s, hkv, d)).astype(np.float32)
+    lv = np.array([s, s // 2], np.int32)
+    feeds = dict(q=qv, k=kv, v=vv, lens=lv)
+
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+    want = np.asarray(decode_attention_ref(qv, kv, vv, jnp.asarray(lv)))
+    for target in ("interpret", "jit", "pallas"):
+        got = np.asarray(
+            repro.compile(g, CompileOptions(target=target))(**feeds)[out])
+        np.testing.assert_allclose(want, got, rtol=2e-5, atol=2e-6,
+                                   err_msg=target)
+    sel = select_kernels(g, batch_size=b, target="pallas")
+    choice = next(c for c in sel.values() if c.op == "decode_attention")
+    assert choice.kernel == ("pallas.decode_attention" if d == 128
+                             else "jnp.ref")
+
+
+def test_plugin_op_end_to_end(rng):
+    """The README's "add a new op" recipe: register_op + shape rule +
+    one lowering rule makes the op compilable on every target (the
+    oracle falls back to the generic rule)."""
+    from repro.core import register_op, register_shape_rule
+    from repro.core.graph import SHAPE_RULES
+
+    register_op("rmsnorm", ("epsilon",))
+
+    @register_shape_rule("rmsnorm")
+    def _rms_shape(node, ins, graph):
+        return ins[0]
+
+    @register_lowering("rmsnorm")
+    def _rms_lower(node, ins, ctx):
+        x = ins[0]
+        ms = jnp.mean(x * x, axis=-1, keepdims=True)
+        return x * jax.lax.rsqrt(ms + node.attrs["epsilon"])
+
+    try:
+        g = Graph()
+        g.add_input("x", (16,))
+        g.add_node("rmsnorm", "norm", ["x"], attrs={"epsilon": 1e-6})
+        g.set_outputs(["norm:out"])
+        x = rng.standard_normal((3, 16)).astype(np.float32)
+        want = x / np.sqrt((x * x).mean(-1, keepdims=True) + 1e-6)
+        for target in ("interpret", "jit", "pallas"):
+            got = repro.compile(g, CompileOptions(target=target))(x=x)["norm:out"]
+            np.testing.assert_allclose(np.asarray(got), want,
+                                       rtol=2e-5, atol=2e-6, err_msg=target)
+    finally:
+        OPS.pop("rmsnorm")
+        SHAPE_RULES.pop("rmsnorm")
+        _RULES.pop(("rmsnorm", None))
+
+
+def test_plugin_op_epilogue_not_double_applied(rng):
+    """The oracle's plugin-op fallback delegates to the generic rule,
+    which (per the documented pattern) applies ctx.epilogue itself; the
+    oracle must then NOT apply the epilogue a second time."""
+    from repro.core import register_op, register_shape_rule
+    from repro.core.graph import SHAPE_RULES
+
+    register_op("double", ())
+
+    @register_shape_rule("double")
+    def _shape(node, ins, graph):
+        return ins[0]
+
+    @register_lowering("double")
+    def _lower(node, ins, ctx):
+        return ctx.epilogue(node, ins[0] * 2.0)
+
+    try:
+        g = Graph()
+        g.add_input("x", (4,))
+        g.add_node("double", "d", ["x"])
+        g.nodes[0].epilogue = "sigmoid"
+        g.set_outputs(["d:out"])
+        x = rng.standard_normal((2, 4)).astype(np.float32)
+        want = 1.0 / (1.0 + np.exp(-2.0 * x))
+        for target in ("interpret", "jit"):
+            got = repro.compile(g, CompileOptions(target=target))(x=x)["d:out"]
+            np.testing.assert_allclose(np.asarray(got), want,
+                                       rtol=2e-5, err_msg=target)
+    finally:
+        OPS.pop("double")
+        SHAPE_RULES.pop("double")
+        _RULES.pop(("double", None))
+
+
+def test_lowering_fingerprint_tracks_rule_edits():
+    """The persistent-cache key mixes in the rule-set digest, so editing
+    or re-registering a rule invalidates cached executables."""
+    from repro.core.lowering import lowering_fingerprint
+
+    fp0 = lowering_fingerprint("jit")
+    assert fp0 == lowering_fingerprint("jit")          # deterministic
+    assert fp0 != lowering_fingerprint("pallas")       # overrides count
+
+    register_lowering("fp_probe")(lambda node, ins, ctx: ins[0] * 2.0)
+    try:
+        fp1 = lowering_fingerprint("jit")
+        assert fp1 != fp0                              # new rule
+        register_lowering("fp_probe")(lambda node, ins, ctx: ins[0] * 3.0)
+        assert lowering_fingerprint("jit") not in (fp0, fp1)  # edited body
+    finally:
+        _RULES.pop(("fp_probe", None))
+    assert lowering_fingerprint("jit") == fp0
+
+
+def test_decode_attention_shape_validation():
+    mb = ModelBuilder()
+    q = mb.input((5, 16), name="q")      # H=5 not a multiple of Hkv=2
+    k = mb.input((8, 2, 16), name="k")
+    v = mb.input((8, 2, 16), name="v")
+    out = mb.decode_attention(q, k, v)
+    g = mb.build([out])
+    with pytest.raises(ValueError, match="multiple of Hkv"):
+        g.infer_shapes()
