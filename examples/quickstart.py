@@ -54,6 +54,39 @@ def cnn_flow():
           f"{float(abs(np.asarray(again(input=img)[out]) - np.asarray(got)).max()):.2e}")
 
 
+def trace_flow():
+    print("== Trace flow (a plain function through the same funnel) ==")
+    from repro.frontends import ops as F
+
+    rng = np.random.default_rng(0)
+    k = rng.standard_normal((3, 3, 3, 16)).astype(np.float32)
+    w_cls = rng.standard_normal((16, 10)).astype(np.float32)
+    w_emb = rng.standard_normal((16, 4)).astype(np.float32)
+
+    def model(image):
+        h = F.global_avg_pool(F.conv2d(image, k, activation="relu"))
+        return {"probs": F.softmax(F.dense(h, w_cls)),
+                "embed": F.dense(h, w_emb)}
+
+    graph = repro.trace(model, (32, 32, 3))      # specs exclude batch
+    exe = repro.compile(graph, repro.CompileOptions(target="jit"))
+    sig = exe.signature
+    print(f"  signature: ({', '.join(sig.input_names)}) -> "
+          f"{dict((n, s.shape) for n, s in sig.outputs)}")
+
+    img = np.random.default_rng(1).standard_normal(
+        (4, 32, 32, 3)).astype(np.float32)
+    out = exe(img)                               # positional binding
+    print(f"  outputs: " + ", ".join(f"{n}{tuple(v.shape)}"
+                                     for n, v in out.items()))
+
+    # Bare callables also go straight into compile (trace frontend):
+    exe2 = repro.compile(model, example_inputs=(img,), target="jit")
+    same = np.array_equal(np.asarray(exe2(img)["probs"]),
+                          np.asarray(out["probs"]))
+    print(f"  compile(fn, example_inputs=...) == compile(trace(fn)): {same}")
+
+
 def llm_flow():
     print("== LLM flow (the same funnel at framework scale) ==")
     from repro.configs import get_config
@@ -75,5 +108,7 @@ def llm_flow():
 
 if __name__ == "__main__":
     cnn_flow()
+    print()
+    trace_flow()
     print()
     llm_flow()

@@ -2,8 +2,11 @@
 # Smoke test for the unified repro.compile() API:
 #   1. compile one small CNN per target ("interpret", "jit", "pallas")
 #      and check each against the oracle;
-#   2. re-compile the "jit" model in a SECOND PROCESS and assert the
-#      persistent executable cache hits (no XLA recompilation).
+#   2. trace-compile a plain function (the "trace" frontend) on every
+#      target and check its multi-output signature;
+#   3. re-run both in a SECOND PROCESS and assert the persistent
+#      executable cache hits (no XLA recompilation) — this guards the
+#      signature-bearing cache-key schema against churn.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -20,6 +23,7 @@ import numpy as np
 
 import repro
 from repro.core import ModelBuilder
+from repro.frontends import ops as F
 
 expect_hit = sys.argv[1] == "hit"
 
@@ -46,6 +50,34 @@ for target in ("jit", "pallas"):
     if expect_hit and target == "jit":
         assert info["hits"] >= 1 and info["misses"] == 0, \
             f"expected a cache hit in the second process, got {info}"
+
+# -- the trace frontend: a plain function, multi-output signature -------
+rng = np.random.default_rng(1)
+k = rng.standard_normal((3, 3, 3, 8)).astype(np.float32)
+w1 = rng.standard_normal((8, 4)).astype(np.float32)
+w2 = rng.standard_normal((8, 2)).astype(np.float32)
+
+def two_head(image):
+    h = F.global_avg_pool(F.conv2d(image, k, activation="relu"))
+    return {"probs": F.softmax(F.dense(h, w1)), "embed": F.dense(h, w2)}
+
+tg = repro.trace(two_head, (16, 16, 3))
+ref = repro.compile(tg, repro.CompileOptions(target="interpret"))(img)
+assert list(ref) == ["probs", "embed"], f"signature lost: {list(ref)}"
+for target in ("jit", "pallas"):
+    exe = repro.compile(tg, repro.CompileOptions(target=target))
+    got = exe(img)                       # positional, signature-bound
+    errs = {n: float(np.abs(np.asarray(ref[n]) - np.asarray(got[n])).max())
+            for n in ref}
+    info = exe.cache_info()
+    print(f"[smoke] trace:{target:<9} max|err|={max(errs.values()):.2e} "
+          f"outputs={list(got)} cache={info}")
+    assert list(got) == ["probs", "embed"]
+    assert max(errs.values()) < 1e-4, f"trace/{target} vs oracle: {errs}"
+    if expect_hit:
+        assert info["hits"] >= 1 and info["misses"] == 0, \
+            f"expected a trace-frontend cache hit (signature-bearing " \
+            f"key) in the second process, got {info}"
 print(f"[smoke] {'cache-hit' if expect_hit else 'cold'} pass OK")
 EOF
 }

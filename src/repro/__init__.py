@@ -19,11 +19,15 @@ _API_NAMES = (
     "CompileOptions",
     "Executable",
     "SchedulerOptions",
+    "Signature",
+    "available_frontends",
     "available_targets",
     "compile",
     "deserialize",
+    "register_frontend",
     "register_target",
     "serve",
+    "trace",
 )
 
 __all__ = list(_API_NAMES)

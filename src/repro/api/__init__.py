@@ -14,7 +14,10 @@ from __future__ import annotations
 
 from typing import Optional
 
-from ..core.graph import Graph
+from .. import frontends
+from ..core.graph import Graph, Signature
+from ..frontends import available_frontends, get_frontend, register_frontend
+from ..frontends.trace import trace
 from ..serve.options import SchedulerOptions
 from .cache import ExecutableCache, resolve_cache_dir
 from .executable import Executable, deserialize
@@ -29,6 +32,10 @@ _GRAPH_TARGET_HINT = (
     "ArchConfig/Model"
 )
 
+#: Keyword args routed to the frontend registry, not CompileOptions.
+_FRONTEND_KW = ("frontend", "specs", "example_inputs", "input_names",
+                "outputs")
+
 
 @register_target("engine")
 def _build_engine(model_or_cfg, options: CompileOptions, **kw):
@@ -40,36 +47,49 @@ def compile(model, options: Optional[CompileOptions] = None,
             **kw) -> Executable:
     """Compile ``model`` into an :class:`Executable`.
 
-    ``model`` is either a graph IR (:class:`repro.core.Graph`) — routed
-    to the target named in ``options.target`` — or a framework-scale
-    ``ArchConfig``/``models.api.Model``, routed to the ``"engine"``
-    adapter.  Remaining keyword args override ``CompileOptions`` fields
+    ``model`` is a graph IR (:class:`repro.core.Graph`) — routed to the
+    target named in ``options.target`` — a framework-scale
+    ``ArchConfig``/``models.api.Model`` routed to the ``"engine"``
+    adapter, or anything a registered frontend can normalize into a
+    Graph: a ``ModelBuilder``, an ``.npz`` container path, or a bare
+    callable (traced; pass ``example_inputs=`` — arrays with a batch
+    dim — or ``specs=``; ``frontend=`` forces a specific frontend).
+    Remaining keyword args override ``CompileOptions`` fields
     (``repro.compile(g, target="interpret")``), except ``params`` /
     ``init_seed`` which are forwarded to the engine adapter.
     """
     factory_kw = {k: kw.pop(k) for k in ("params", "init_seed") if k in kw}
+    frontend_kw = {k: kw.pop(k) for k in _FRONTEND_KW if k in kw}
     if options is None:
         options = CompileOptions()
     if kw:
         options = options.replace(**kw)
 
-    if isinstance(model, Graph):
-        if options.target == "engine":
-            raise TypeError("target='engine' compiles ArchConfig/Model, "
-                            "not a graph IR; use 'jit'/'pallas'/'interpret'")
-        if factory_kw:
-            raise TypeError(f"unexpected args for graph targets: "
-                            f"{sorted(factory_kw)}")
-        return get_target(options.target)(model, options)
+    if not isinstance(model, Graph):
+        is_cfg = hasattr(model, "family") and hasattr(model, "name")
+        is_model = hasattr(model, "cfg") and hasattr(model, "forward")
+        if is_cfg or is_model:
+            if frontend_kw:
+                raise TypeError(f"unexpected args for the engine target: "
+                                f"{sorted(frontend_kw)}")
+            if options.target != "engine":
+                raise TypeError(
+                    f"target {options.target!r}: {_GRAPH_TARGET_HINT}")
+            return get_target("engine")(model, options, **factory_kw)
+        # Everything else goes through the frontend registry (raises a
+        # TypeError naming the registered frontends if nothing accepts).
+        model = frontends.resolve(model, **frontend_kw)
+    elif frontend_kw:
+        raise TypeError(f"unexpected args for graph models: "
+                        f"{sorted(frontend_kw)}")
 
-    is_cfg = hasattr(model, "family") and hasattr(model, "name")
-    is_model = hasattr(model, "cfg") and hasattr(model, "forward")
-    if not (is_cfg or is_model):
-        raise TypeError(f"cannot compile {type(model).__name__}: expected "
-                        f"a Graph, ArchConfig or Model")
-    if options.target != "engine":
-        raise TypeError(f"target {options.target!r}: {_GRAPH_TARGET_HINT}")
-    return get_target("engine")(model, options, **factory_kw)
+    if options.target == "engine":
+        raise TypeError("target='engine' compiles ArchConfig/Model, "
+                        "not a graph IR; use 'jit'/'pallas'/'interpret'")
+    if factory_kw:
+        raise TypeError(f"unexpected args for graph targets: "
+                        f"{sorted(factory_kw)}")
+    return get_target(options.target)(model, options)
 
 
 __all__ = [
@@ -79,12 +99,17 @@ __all__ = [
     "GraphExecutable",
     "InterpretExecutable",
     "JitExecutable",
+    "Signature",
+    "available_frontends",
     "available_targets",
     "compile",
     "deserialize",
+    "get_frontend",
     "get_target",
+    "register_frontend",
     "register_target",
     "resolve_cache_dir",
     "SchedulerOptions",
     "serve",
+    "trace",
 ]

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.graph import Signature
 from .executable import Executable, pack
 from .options import CompileOptions
 
@@ -42,9 +43,18 @@ class ModelExecutable(Executable):
         self.compile_time: Optional[float] = None
         self._fwd = jax.jit(lambda p, b: self.model.forward(p, b)[0])
         self._seen_shapes = set()
+        # Shapes are dynamic at this scale (prefill length, batch), so
+        # the signature carries names + order but no static specs.
+        from ..configs.base import extra_input_specs
+        self.signature = Signature(
+            inputs=(("tokens", None),) + tuple(
+                (n, None) for n in extra_input_specs(self.cfg)),
+            outputs=(("logits", None),),
+        )
 
     # ------------------------------------------------------------------
-    def __call__(self, **batch) -> Dict[str, Any]:
+    def __call__(self, *pos, **batch) -> Dict[str, Any]:
+        batch = self.signature.bind(pos, batch)
         batch = {k: jnp.asarray(v) for k, v in batch.items()}
         sig = tuple(sorted((k, v.shape, str(v.dtype))
                            for k, v in batch.items()))

@@ -26,6 +26,7 @@ import io
 import json
 from typing import Any, Dict, Optional
 
+from ..core.graph import Signature
 from .options import CompileOptions
 
 MAGIC = b"REPROEXE1"
@@ -38,10 +39,16 @@ class Executable(abc.ABC):
 
     options: CompileOptions
     compile_time: Optional[float]
+    #: The model's public I/O contract: ordered, named inputs and
+    #: outputs.  ``__call__`` binds arguments against it (positional or
+    #: keyword) and keys the output dict by its output names.
+    signature: Optional[Signature] = None
 
     @abc.abstractmethod
-    def __call__(self, **inputs) -> Dict[str, Any]:
-        """Run inference; returns a dict of named output arrays."""
+    def __call__(self, *args, **inputs) -> Dict[str, Any]:
+        """Run inference; inputs bind positionally (signature order) or
+        by keyword; returns a dict keyed by the signature's output
+        names."""
 
     @abc.abstractmethod
     def cost_summary(self) -> Dict[str, Any]:
@@ -86,7 +93,7 @@ def deserialize(data: bytes) -> Executable:
     options = options.replace(cache_dir=None, dump_ir=None)
     kind = meta.get("kind")
     if kind == "graph":
-        from ..core.keras_like import load_model
+        from ..frontends.container import load_model
         from . import compile as api_compile
         graph = load_model(io.BytesIO(body))
         return api_compile(graph, options)

@@ -29,7 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.graph import Graph
-from ..core.keras_like import save_model
+from ..frontends.container import save_model
 from ..core.lowering import execute_graph, lowering_fingerprint
 from ..core.passes import run_pipeline
 from ..core.selection import KernelChoice, select_kernels
@@ -74,30 +74,38 @@ class GraphExecutable(Executable):
     def __init__(self, graph: Graph, options: CompileOptions) -> None:
         self.source = graph
         self.options = options
+        self.signature = graph.signature()
         self.compile_time: Optional[float] = None
 
     def serialize(self) -> bytes:
         buf = io.BytesIO()
         save_model(self.source, buf)
-        return pack("graph", self.options, buf.getvalue())
+        return pack("graph", self.options, buf.getvalue(),
+                    extra={"signature": self.signature.to_dict()})
 
     def ensure_compiled(self, batch_size: int = 1) -> Callable:
-        """Callable taking inputs positionally in graph order, with any
-        per-batch specialization done up front.  Base implementation
-        (eager targets) just binds input names; JitExecutable overrides
-        it with the AOT-compiled program."""
-        input_names = list(self.source.inputs)
-        return lambda *args: self(**dict(zip(input_names, args)))
+        """Callable taking inputs positionally in signature order, with
+        any per-batch specialization done up front.  Base implementation
+        (eager targets) just forwards; JitExecutable overrides it with
+        the AOT-compiled program."""
+        return lambda *args: self(*args)
 
     def cache_info(self) -> dict:
         """Disk-cache counters; zeros for targets without one."""
         return {"dir": None, "hits": 0, "misses": 0}
 
-    def _gather_inputs(self, inputs) -> List[jnp.ndarray]:
+    def _gather_inputs(self, pos, inputs) -> List[jnp.ndarray]:
+        """Bind positional-or-keyword call args against the signature;
+        returns arrays ordered by the graph's declared inputs."""
+        inputs = self.signature.bind(pos, inputs)
         missing = [n for n in self.source.inputs if n not in inputs]
         if missing:
             raise ValueError(f"missing inputs {missing}; expected "
                              f"{list(self.source.inputs)}")
+        unknown = [k for k in inputs if k not in self.source.inputs]
+        if unknown:
+            raise TypeError(f"unexpected inputs {unknown}; expected "
+                            f"{list(self.source.inputs)}")
         args = []
         for n, spec in self.source.inputs.items():
             a = jnp.asarray(inputs[n])
@@ -107,6 +115,13 @@ class GraphExecutable(Executable):
                     f"got {a.shape}")
             args.append(a)
         return args
+
+    def _public_outputs(self, out) -> dict:
+        """Re-key an output dict from graph tensor names to the
+        signature's public output names."""
+        return {pub: out[t]
+                for pub, t in zip(self.source.output_names,
+                                  self.source.outputs)}
 
 
 @register_target("interpret")
@@ -119,9 +134,10 @@ class InterpretExecutable(GraphExecutable):
         self._nn = SimpleNN(graph)
         self.compile_time = time.perf_counter() - t0
 
-    def __call__(self, **inputs):
-        args = self._gather_inputs(inputs)
-        return self._nn(**dict(zip(self.source.inputs, args)))
+    def __call__(self, *pos, **inputs):
+        args = self._gather_inputs(pos, inputs)
+        return self._public_outputs(
+            self._nn(**dict(zip(self.source.inputs, args))))
 
     def cost_summary(self):
         return {
@@ -180,6 +196,7 @@ class JitExecutable(GraphExecutable):
         weights = self._weights_digest() if self.options.embed_weights else ""
         return cache_key(self.graph.structure_hash(), weights,
                          self.options.cache_token(), f"batch={batch_size}",
+                         f"sig={self.signature.cache_token()}",
                          f"rules={lowering_fingerprint(self.lowering_target)}")
 
     # -- compilation ---------------------------------------------------
@@ -257,8 +274,8 @@ class JitExecutable(GraphExecutable):
                 return b
         return batch
 
-    def __call__(self, **inputs):
-        args = self._gather_inputs(inputs)
+    def __call__(self, *pos, **inputs):
+        args = self._gather_inputs(pos, inputs)
         batch = args[0].shape[0]
         bucket = self._pick_bucket(batch)
         fn = self.ensure_compiled(bucket)
@@ -272,10 +289,10 @@ class JitExecutable(GraphExecutable):
         if bucket != batch:
             out = {k: v[:batch] for k, v in out.items()}
         # Passes may rename output tensors (e.g. a fused terminal
-        # activation); the public contract keys outputs by the SOURCE
-        # graph's names, identically across targets.
-        return {src: out[opt] for src, opt in
-                zip(self.source.outputs, self.graph.outputs)}
+        # activation); the public contract keys outputs by the
+        # signature's names, identically across targets.
+        return {pub: out[opt] for pub, opt in
+                zip(self.source.output_names, self.graph.outputs)}
 
     # -- introspection -------------------------------------------------
     def cache_info(self) -> dict:

@@ -160,5 +160,19 @@ def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Dict[str, Any]:
     return specs
 
 
+def extra_input_specs(cfg: ArchConfig, batch: int = 1
+                      ) -> Dict[str, Tuple[Tuple[int, ...], str]]:
+    """Named non-token inputs a family's prefill consumes, as
+    ``name -> ((batch,)+shape, dtype)``.  The serving scheduler fills
+    these with zeros when a request does not supply them, and the
+    "engine" executable's Signature lists them."""
+    if cfg.family == "audio":
+        return {"frames": ((batch, cfg.n_frames, cfg.d_model), "float32")}
+    if cfg.family == "vlm":
+        return {"patches": ((batch, cfg.num_image_tokens, cfg.vit_dim),
+                            "float32")}
+    return {}
+
+
 # needed by input_specs type hints
 from typing import Any  # noqa: E402

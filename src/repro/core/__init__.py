@@ -11,9 +11,12 @@ The compilation entry point lives in ``repro.api`` (``repro.compile``);
 the shared graph→JAX lowering is ``repro.core.lowering``.
 """
 
-from .graph import (Graph, Node, TensorSpec, register_op,
+from .graph import (Graph, Node, Signature, TensorSpec, register_op,
                     register_shape_rule)
-from .keras_like import ModelBuilder, load_model, save_model
+from .keras_like import ModelBuilder
+# The container moved to repro.frontends.container; re-export the live
+# implementations (keras_like keeps warn-once shims for old call sites).
+from ..frontends.container import load_model, save_model
 from .compiler import CompiledModel
 from .simple import SimpleNN
 from .passes import (run_pipeline, DEFAULT_PIPELINE, PassManager,

@@ -126,6 +126,79 @@ class TensorSpec:
         return self.size * np.dtype(self.dtype).itemsize
 
 
+@dataclasses.dataclass(frozen=True)
+class Signature:
+    """First-class model I/O: ordered, named, multi-input *and*
+    multi-output.
+
+    ``inputs`` and ``outputs`` are ordered ``(name, spec)`` pairs.  The
+    names are the *public* contract — what ``Executable.__call__``
+    binds positionally-or-by-keyword and what the output dict is keyed
+    by — independent of the SSA tensor names inside the graph.  A
+    ``spec`` may be ``None`` for executables whose shapes are not
+    statically known (the framework-scale "engine" target).
+    """
+
+    inputs: Tuple[Tuple[str, Optional[TensorSpec]], ...]
+    outputs: Tuple[Tuple[str, Optional[TensorSpec]], ...]
+
+    @property
+    def input_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.inputs)
+
+    @property
+    def output_names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _ in self.outputs)
+
+    def bind(self, args: Sequence[Any], kwargs: Dict[str, Any]) -> Dict[str, Any]:
+        """Positional-or-keyword binding of call arguments to input
+        names (missing-input checks are left to the caller, which knows
+        how to phrase its own diagnostic)."""
+        names = self.input_names
+        if len(args) > len(names):
+            raise TypeError(
+                f"got {len(args)} positional inputs; signature takes "
+                f"{len(names)}: {list(names)}")
+        bound = dict(zip(names, args))
+        for k, v in kwargs.items():
+            if k in bound:
+                raise TypeError(f"got multiple values for input {k!r}")
+            bound[k] = v
+        return bound
+
+    # -- (de)serialization --------------------------------------------
+    @staticmethod
+    def _spec_dict(spec: Optional[TensorSpec]):
+        if spec is None:
+            return None
+        return {"shape": list(spec.shape), "dtype": spec.dtype}
+
+    @staticmethod
+    def _spec_from(d) -> Optional[TensorSpec]:
+        if d is None:
+            return None
+        return TensorSpec(tuple(d["shape"]), d["dtype"])
+
+    def to_dict(self) -> dict:
+        return {
+            "inputs": [[n, self._spec_dict(s)] for n, s in self.inputs],
+            "outputs": [[n, self._spec_dict(s)] for n, s in self.outputs],
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Signature":
+        return cls(
+            inputs=tuple((n, cls._spec_from(s)) for n, s in d["inputs"]),
+            outputs=tuple((n, cls._spec_from(s)) for n, s in d["outputs"]),
+        )
+
+    def cache_token(self) -> str:
+        """Stable string for the persistent executable-cache key: two
+        compilations whose public I/O contract differs (names, order,
+        shapes) must never share a cached program."""
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+
 @dataclasses.dataclass
 class Node:
     """One IR node.  ``params`` holds names of weight tensors in
@@ -169,12 +242,22 @@ class Graph:
         self.outputs: List[str] = []
         self.params: Dict[str, np.ndarray] = {}
         self._producers: Dict[str, Node] = {}
+        # Public output names (None = default to the tensor names).
+        self._output_names: Optional[List[str]] = None
+        # Incrementally-maintained shape specs: add_input/add_node keep
+        # it current so construction-time queries (ModelBuilder, the
+        # tracer) are O(1) per layer instead of re-inferring the whole
+        # graph.  Any mutation outside those two paths invalidates it
+        # (None), and infer_shapes() falls back to the full walk.
+        self._spec_cache: Optional[Dict[str, TensorSpec]] = {}
 
     # -- construction -------------------------------------------------
     def add_input(self, name: str, shape: Sequence[int], dtype: str = "float32") -> str:
         if name in self.inputs or name in self._producers:
             raise ValueError(f"duplicate tensor name {name!r}")
         self.inputs[name] = TensorSpec(tuple(shape), dtype)
+        if self._spec_cache is not None:
+            self._spec_cache[name] = self.inputs[name]
         return name
 
     def add_param(self, name: str, value: np.ndarray) -> str:
@@ -212,13 +295,55 @@ class Graph:
                 raise ValueError(f"node {name!r} references unknown param {p!r}")
         self.nodes.append(node)
         self._producers[output] = node
+        if self._spec_cache is not None:
+            try:
+                self._spec_cache[output] = self._infer_node(
+                    node, self._spec_cache)
+            except Exception:
+                # Not inferable right now (missing input spec, plug-in
+                # rule quirk, genuinely invalid graph): drop the cache;
+                # infer_shapes() will recompute — and surface the real
+                # error where it always has.
+                self._spec_cache = None
         return output
 
-    def set_outputs(self, names: Sequence[str]) -> None:
-        for n in names:
+    def set_outputs(self, names) -> None:
+        """Declare the graph outputs.
+
+        ``names`` is either a sequence of tensor names (public output
+        names default to the tensor names) or a mapping of *public name
+        -> tensor name*, which gives the outputs user-chosen names —
+        the multi-output half of the graph's :class:`Signature`.
+        """
+        if isinstance(names, dict):
+            public, tensors = list(names.keys()), list(names.values())
+        else:
+            public, tensors = None, list(names)
+        for n in tensors:
             if n not in self._producers and n not in self.inputs:
                 raise ValueError(f"unknown output tensor {n!r}")
-        self.outputs = list(names)
+        if public is not None and len(set(public)) != len(public):
+            raise ValueError(f"duplicate output names {public}")
+        self.outputs = tensors
+        self._output_names = public
+
+    @property
+    def output_names(self) -> List[str]:
+        """Public output names, parallel to ``outputs`` (defaults to
+        the tensor names when none were chosen)."""
+        if (self._output_names is not None
+                and len(self._output_names) == len(self.outputs)):
+            return list(self._output_names)
+        return list(self.outputs)
+
+    def signature(self) -> Signature:
+        """The graph's public I/O contract (names + static specs)."""
+        specs = self.infer_shapes()
+        return Signature(
+            inputs=tuple(self.inputs.items()),
+            outputs=tuple((pub, specs[t])
+                          for pub, t in zip(self.output_names, self.outputs)),
+        )
 
     # -- queries ------------------------------------------------------
     def producer(self, tensor: str) -> Optional[Node]:
@@ -230,6 +355,7 @@ class Graph:
     def rebuild_index(self) -> None:
         """Recompute the producer index after passes mutate ``nodes``."""
         self._producers = {n.output: n for n in self.nodes}
+        self._spec_cache = None
 
     def toposort(self) -> List[Node]:
         """Nodes are appended in topological order by construction, but
@@ -260,10 +386,21 @@ class Graph:
         This is the compile-time knowledge the paper exploits: every
         intermediate tensor's shape is known before any code runs.
         """
+        if (self._spec_cache is not None
+                and len(self._spec_cache) == len(self.inputs) + len(self.nodes)):
+            return dict(self._spec_cache)
         specs: Dict[str, TensorSpec] = dict(self.inputs)
         for node in self.toposort():
             specs[node.output] = self._infer_node(node, specs)
+        self._spec_cache = dict(specs)
         return specs
+
+    def spec(self, tensor: str) -> TensorSpec:
+        """Static spec of one tensor — O(1) during construction (the
+        incremental cache), a full inference otherwise."""
+        if self._spec_cache is not None and tensor in self._spec_cache:
+            return self._spec_cache[tensor]
+        return self.infer_shapes()[tensor]
 
     def _infer_node(self, node: Node, specs: Dict[str, TensorSpec]) -> TensorSpec:
         op = node.op
@@ -358,6 +495,7 @@ class Graph:
         payload = {
             "inputs": {k: (v.shape, v.dtype) for k, v in self.inputs.items()},
             "outputs": self.outputs,
+            "output_names": self.output_names,
             "nodes": [
                 (
                     n.op,
@@ -395,6 +533,10 @@ class Graph:
             for n in self.nodes
         ]
         g.rebuild_index()
+        g._output_names = (list(self._output_names)
+                           if self._output_names is not None else None)
+        g._spec_cache = (dict(self._spec_cache)
+                         if self._spec_cache is not None else None)
         return g
 
     def summary(self) -> str:

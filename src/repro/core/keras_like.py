@@ -10,7 +10,7 @@ model at runtime, then compile" flow of the paper is preserved.
 
 from __future__ import annotations
 
-import json
+import warnings
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -48,7 +48,7 @@ class ModelBuilder:
                strides=(1, 1), padding="same", use_bias=True,
                activation: Optional[str] = None) -> str:
         name = self._name("conv2d")
-        cin = self.graph.infer_shapes()[x].shape[-1]
+        cin = self.graph.spec(x).shape[-1]
         k = self._init(kernel_size + (cin, filters), cin * kernel_size[0] * kernel_size[1])
         params = {"kernel": self.graph.add_param(f"{name}/kernel", k)}
         if use_bias:
@@ -63,7 +63,7 @@ class ModelBuilder:
                          strides=(1, 1), padding="same", mult: int = 1,
                          use_bias=True, activation: Optional[str] = None) -> str:
         name = self._name("dwconv2d")
-        c = self.graph.infer_shapes()[x].shape[-1]
+        c = self.graph.spec(x).shape[-1]
         k = self._init(kernel_size + (c, mult), kernel_size[0] * kernel_size[1])
         params = {"kernel": self.graph.add_param(f"{name}/kernel", k)}
         if use_bias:
@@ -77,7 +77,7 @@ class ModelBuilder:
     def dense(self, x: str, units: int, use_bias=True,
               activation: Optional[str] = None) -> str:
         name = self._name("dense")
-        cin = self.graph.infer_shapes()[x].shape[-1]
+        cin = self.graph.spec(x).shape[-1]
         params = {"kernel": self.graph.add_param(
             f"{name}/kernel", self._init((cin, units), cin))}
         if use_bias:
@@ -88,7 +88,7 @@ class ModelBuilder:
 
     def batchnorm(self, x: str, epsilon: float = 1e-3) -> str:
         name = self._name("bn")
-        c = self.graph.infer_shapes()[x].shape[-1]
+        c = self.graph.spec(x).shape[-1]
         params = {
             "gamma": self.graph.add_param(
                 f"{name}/gamma", self._rng.uniform(0.5, 1.5, c).astype(np.float32)),
@@ -136,8 +136,7 @@ class ModelBuilder:
         return self.graph.add_node("add", self._name("add"), [a, b])
 
     def concat(self, xs: Sequence[str], axis: int = -1) -> str:
-        specs = self.graph.infer_shapes()
-        rank = len(specs[xs[0]].shape)
+        rank = len(self.graph.spec(xs[0]).shape)
         axis = axis % rank
         return self.graph.add_node("concat", self._name("concat"), list(xs),
                                    attrs={"axis": axis})
@@ -160,66 +159,51 @@ class ModelBuilder:
         return self.graph.add_node("decode_attention", self._name("attn"),
                                    ins, attrs=attrs)
 
-    def build(self, outputs: Sequence[str]) -> Graph:
-        self.graph.set_outputs(list(outputs))
+    def build(self, outputs) -> Graph:
+        """Finalize the graph.  ``outputs`` is a sequence of tensor
+        names, or a mapping of *public output name -> tensor name* for
+        user-chosen multi-output signatures."""
+        self.graph.set_outputs(
+            dict(outputs) if isinstance(outputs, dict) else list(outputs))
         return self.graph
 
 
 # ---------------------------------------------------------------------------
-def save_model(graph: Graph, path: str) -> None:
-    """Serialize graph + weights (.npz with an embedded JSON header) —
-    the stand-in for the paper's Keras-HDF5 container."""
-    header = {
-        "inputs": {k: {"shape": v.shape, "dtype": v.dtype}
-                   for k, v in graph.inputs.items()},
-        "outputs": graph.outputs,
-        "nodes": [
-            {"op": n.op, "name": n.name, "inputs": n.inputs, "output": n.output,
-             "attrs": _jsonify(n.attrs), "params": n.params,
-             "epilogue": n.epilogue, "epilogue_attrs": _jsonify(n.epilogue_attrs)}
-            for n in graph.nodes
-        ],
-    }
-    arrays = {f"param::{k}": v for k, v in graph.params.items()}
-    arrays["__header__"] = np.frombuffer(
-        json.dumps(header).encode(), dtype=np.uint8)
-    np.savez(path, **arrays)
+# The .npz+JSON container moved to repro.frontends.container; these
+# shims keep old imports working (once-per-process DeprecationWarning).
+_warned = False
 
 
-def load_model(path: str) -> Graph:
-    data = np.load(path, allow_pickle=False)
-    header = json.loads(bytes(data["__header__"]).decode())
-    g = Graph()
-    for name, spec in header["inputs"].items():
-        g.add_input(name, spec["shape"], spec["dtype"])
-    for k in data.files:
-        if k.startswith("param::"):
-            g.add_param(k[len("param::"):], data[k])
-    for nd in header["nodes"]:
-        from .graph import Node
-        node = Node(op=nd["op"], name=nd["name"], inputs=nd["inputs"],
-                    output=nd["output"], attrs=_tuplify(nd["attrs"]),
-                    params=nd["params"], epilogue=nd["epilogue"],
-                    epilogue_attrs=_tuplify(nd["epilogue_attrs"]))
-        g.nodes.append(node)
-    g.rebuild_index()
-    g.set_outputs(header["outputs"])
-    return g
+def _warn_once() -> None:
+    global _warned
+    if not _warned:
+        _warned = True
+        warnings.warn(
+            "repro.core.keras_like.save_model/load_model moved to "
+            "repro.frontends.container (and repro.compile('model.npz') "
+            "now loads containers directly via the 'container' frontend)",
+            DeprecationWarning, stacklevel=3)
+
+
+def save_model(graph: Graph, path) -> None:
+    """DEPRECATED shim: use :func:`repro.frontends.container.save_model`."""
+    _warn_once()
+    from ..frontends.container import save_model as _save
+    _save(graph, path)
+
+
+def load_model(path) -> Graph:
+    """DEPRECATED shim: use :func:`repro.frontends.container.load_model`."""
+    _warn_once()
+    from ..frontends.container import load_model as _load
+    return _load(path)
 
 
 def _jsonify(obj):
-    if isinstance(obj, dict):
-        return {k: _jsonify(v) for k, v in obj.items()}
-    if isinstance(obj, (tuple, list)):
-        return [_jsonify(v) for v in obj]
-    return obj
+    from ..frontends.container import _jsonify as _j
+    return _j(obj)
 
 
 def _tuplify(obj):
-    """JSON round-trips tuples as lists; the IR uses tuples for shapes
-    and paddings, so convert lists (recursively) back to tuples."""
-    if isinstance(obj, dict):
-        return {k: _tuplify(v) for k, v in obj.items()}
-    if isinstance(obj, list):
-        return tuple(_tuplify(v) for v in obj)
-    return obj
+    from ..frontends.container import _tuplify as _t
+    return _t(obj)

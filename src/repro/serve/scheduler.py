@@ -45,6 +45,12 @@ class Request:
     max_new_tokens: int = 32
     eos_id: int = -1              # -1 = never
     temperature: float = 0.0      # 0 = greedy
+    #: Additional named model inputs consumed at prefill (the model
+    #: signature's non-token inputs: ``frames`` for audio families,
+    #: ``patches`` for VLMs).  Arrays may carry the leading batch dim
+    #: (of 1) or omit it.  Missing extras are zero-filled; names the
+    #: model does not declare are rejected at ``submit``.
+    inputs: Optional[Dict[str, np.ndarray]] = None
 
 
 @dataclasses.dataclass
@@ -126,6 +132,26 @@ class Scheduler:
             raise ValueError(
                 f"prompt of {plen} tokens does not fit max_len="
                 f"{self.options.max_len} (uid={req.uid})")
+        if req.inputs:
+            from ..configs.base import extra_input_specs
+            allowed = extra_input_specs(self.cfg)
+            unknown = sorted(set(req.inputs) - set(allowed))
+            if unknown:
+                raise ValueError(
+                    f"unknown inputs {unknown} for {self.cfg.name!r} "
+                    f"(family {self.cfg.family!r}); accepted extras: "
+                    f"{sorted(allowed) or 'none'} (uid={req.uid})")
+            # Shapes are rejected HERE, not at admission: by admission
+            # time the request is out of the queue and a raise would
+            # kill the step loop with other requests in flight.
+            for name, a in req.inputs.items():
+                shape = allowed[name][0]
+                got = tuple(np.asarray(a).shape)
+                if got not in (shape, shape[1:]):
+                    raise ValueError(
+                        f"input {name!r}: expected {shape} (or the "
+                        f"batch-less {shape[1:]}), got {got} "
+                        f"(uid={req.uid})")
         with self._lock:
             if (self.options.max_queue is not None
                     and len(self._queue) >= self.options.max_queue):
@@ -165,15 +191,27 @@ class Scheduler:
             return self._queue.pop(i)
 
     # -- admission -----------------------------------------------------
-    def _prefill_batch(self, prompt: np.ndarray) -> Dict[str, jnp.ndarray]:
+    def _prefill_batch(self, prompt: np.ndarray,
+                       extras: Optional[Dict[str, np.ndarray]] = None
+                       ) -> Dict[str, jnp.ndarray]:
+        """The named multi-input prefill batch: tokens plus the model
+        signature's extra inputs — request-supplied where given
+        (batch dim added if omitted), zero-filled otherwise."""
+        from ..configs.base import extra_input_specs
         batch = {"tokens": jnp.asarray(prompt)}
-        if self.cfg.family == "audio":
-            batch["frames"] = jnp.zeros(
-                (1, self.cfg.n_frames, self.cfg.d_model), jnp.float32)
-        if self.cfg.family == "vlm":
-            batch["patches"] = jnp.zeros(
-                (1, self.cfg.num_image_tokens, self.cfg.vit_dim),
-                jnp.float32)
+        extras = extras or {}
+        for name, (shape, dtype) in extra_input_specs(self.cfg).items():
+            if name in extras:
+                a = jnp.asarray(extras[name], dtype)
+                if a.ndim == len(shape) - 1:
+                    a = a[None]
+                if a.shape != shape:
+                    raise ValueError(
+                        f"input {name!r}: expected {shape} "
+                        f"(or the batch-less {shape[1:]}), got {a.shape}")
+                batch[name] = a
+            else:
+                batch[name] = jnp.zeros(shape, dtype)
         return batch
 
     def _admit_free_slots(self) -> None:
@@ -190,7 +228,7 @@ class Scheduler:
             prompt = np.asarray(req.prompt, np.int32)[None, :]
             one = self.model.init_cache(1, self.options.max_len)
             logits, one = self._prefill(
-                self.params, self._prefill_batch(prompt), one)
+                self.params, self._prefill_batch(prompt, req.inputs), one)
             tok = self.sampler(logits[:, -1], req.temperature,
                                uid=req.uid, index=0)
 

@@ -1,0 +1,378 @@
+"""The unified frontend layer: ``repro.trace``, the frontend registry,
+and first-class multi-input/multi-output signatures.
+
+Covers the acceptance criteria of the frontend PR: a traced function
+and the identical ``ModelBuilder`` model are bit-identical on every
+target; a two-output traced model round-trips ``serialize`` /
+``deserialize`` with its ``Signature`` intact; model construction is
+incremental (no per-layer full shape inference); and bare callables /
+``.npz`` containers compile straight through ``repro.compile``.
+"""
+
+import os
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import Graph, ModelBuilder, Signature, TensorSpec
+from repro.frontends import (Frontend, available_frontends, ops as F,
+                             register_frontend)
+from repro.frontends.container import load_model, save_model
+from repro.frontends.trace import TraceError
+
+TARGETS = ("interpret", "jit", "pallas")
+
+
+def _builder_cnn():
+    """Reference model built through ModelBuilder; returns (graph, params)."""
+    mb = ModelBuilder().seed(3)
+    x = mb.input((8, 8, 3), name="image")
+    h = mb.conv2d(x, 8, (3, 3), activation="relu")    # conv2d_1, act_relu_2
+    h = mb.batchnorm(h)                               # bn_3
+    h = mb.maxpool(h)
+    h = mb.global_avg_pool(h)
+    out = mb.dense(h, 4, activation="tanh")           # dense_6, act_tanh_7
+    return mb.build([out]), mb.graph.params, out
+
+
+def _traced_cnn(params):
+    """The same model as a plain function over the same weight arrays."""
+
+    def fn(image):
+        h = F.conv2d(image, params["conv2d_1/kernel"],
+                     params["conv2d_1/bias"], activation="relu")
+        h = F.batchnorm(h, params["bn_3/gamma"], params["bn_3/beta"],
+                        params["bn_3/mean"], params["bn_3/var"])
+        h = F.maxpool(h)
+        h = F.global_avg_pool(h)
+        return F.dense(h, params["dense_6/kernel"], params["dense_6/bias"],
+                       activation="tanh")
+
+    return repro.trace(fn, (8, 8, 3))
+
+
+# ---------------------------------------------------------------- tracing
+def test_trace_matches_builder_bit_identical_on_every_target(rng):
+    """Acceptance: trace(fn) and the identical ModelBuilder model give
+    bit-identical outputs on interpret, jit and pallas."""
+    g1, params, out = _builder_cnn()
+    g2 = _traced_cnn(params)
+    x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+    for target in TARGETS:
+        opts = repro.CompileOptions(target=target)
+        want = np.asarray(repro.compile(g1, opts)(image=x)[out])
+        got = np.asarray(repro.compile(g2, opts)(image=x)["output"])
+        np.testing.assert_array_equal(got, want, err_msg=target)
+
+
+def test_trace_signature_from_function():
+    g = _traced_cnn(_builder_cnn()[1])
+    sig = g.signature()
+    assert isinstance(sig, Signature)
+    assert sig.input_names == ("image",)          # from the fn's parameter
+    assert sig.outputs == (("output", TensorSpec((4,))),)
+
+
+def test_trace_operators_and_constants(rng):
+    w = rng.standard_normal((6, 3)).astype(np.float32)
+
+    def fn(a, b):
+        h = (a + b) * 2.0 + np.float32(1.0)       # tensor+tensor, scalar lift
+        return h @ w                              # matmul -> dense
+
+    g = repro.trace(fn, (6,), (6,))
+    assert g.signature().input_names == ("a", "b")
+    a = rng.standard_normal((3, 6)).astype(np.float32)
+    b = rng.standard_normal((3, 6)).astype(np.float32)
+    got = np.asarray(
+        repro.compile(g, target="interpret")(a=a, b=b)["output"])
+    np.testing.assert_allclose(got, ((a + b) * 2.0 + 1.0) @ w, rtol=1e-5)
+
+
+def test_trace_shared_weight_interned_once(rng):
+    w = rng.standard_normal((4, 4)).astype(np.float32)
+
+    def fn(x):
+        return F.dense(F.dense(x, w), w)          # weight tying
+
+    g = repro.trace(fn, (4,))
+    assert sum(1 for p in g.params if p.endswith("/kernel")) == 1
+
+
+def test_trace_numpy_left_operand(rng):
+    """ndarray * TracedTensor must defer to the tracer (one mul node),
+    not let numpy broadcast elementwise over the abstract tensor."""
+    w = rng.standard_normal(4).astype(np.float32)
+
+    def fn(x):
+        return w * x + w                          # numpy on the LEFT
+
+    g = repro.trace(fn, (4,))
+    assert [n.op for n in g.nodes] == ["constant", "mul", "constant", "add"]
+    x = rng.standard_normal((2, 4)).astype(np.float32)
+    got = np.asarray(repro.compile(g, target="interpret")(x)["output"])
+    np.testing.assert_allclose(got, w * x + w, rtol=1e-6)
+
+
+def test_trace_distinct_temporary_weights_not_aliased(rng):
+    """Two distinct weight *temporaries* must intern as two params even
+    if CPython recycles the first one's id() after it is copied+freed
+    (the id-keyed weight-tying memo must keep its keys alive)."""
+
+    def fn(x):
+        # float64 -> both arrays are copied to float32 inside the
+        # tracer and the originals become collectable temporaries
+        h = F.dense(x, np.ones((4, 4)))
+        return F.dense(h, np.zeros((4, 4)))
+
+    g = repro.trace(fn, (4,))
+    kernels = [p for p in g.params if p.endswith("/kernel")]
+    assert len(kernels) == 2
+    x = np.ones((1, 4), np.float32)
+    got = np.asarray(repro.compile(g, target="interpret")(x)["output"])
+    np.testing.assert_array_equal(got, np.zeros((1, 4), np.float32))
+
+
+def test_trace_rejects_data_dependent_control_flow():
+    def fn(x):
+        if x:                                      # truth value of abstract
+            return x
+        return x
+
+    with pytest.raises(TraceError, match="branch"):
+        repro.trace(fn, (4,))
+
+
+def test_trace_rejects_foreign_and_non_tensor_outputs():
+    with pytest.raises(TraceError, match="return"):
+        repro.trace(lambda x: 3.0, (4,))
+    leaked = None
+
+    def capture(x):
+        nonlocal leaked
+        leaked = x
+        return F.relu(x)
+
+    repro.trace(capture, (4,))
+    with pytest.raises(TraceError, match="different trace"):
+        repro.trace(lambda x: x + leaked, (4,))
+
+
+# --------------------------------------------------- multi-output end to end
+def _two_head(rng):
+    k = rng.standard_normal((3, 3, 3, 8)).astype(np.float32)
+    w1 = rng.standard_normal((8, 4)).astype(np.float32)
+    w2 = rng.standard_normal((8, 2)).astype(np.float32)
+
+    def fn(image):
+        h = F.global_avg_pool(F.conv2d(image, k, activation="relu"))
+        return {"probs": F.softmax(F.dense(h, w1)),
+                "embed": F.dense(h, w2)}
+
+    return repro.trace(fn, (8, 8, 3))
+
+
+def test_two_head_goldens_across_targets(rng):
+    g = _two_head(rng)
+    x = rng.standard_normal((2, 8, 8, 3)).astype(np.float32)
+    ref = repro.compile(g, target="interpret")(x)
+    assert list(ref) == ["probs", "embed"]        # user names, user order
+    for target in ("jit", "pallas"):
+        got = repro.compile(g, target=target)(x)
+        assert list(got) == ["probs", "embed"]
+        for name in ref:
+            np.testing.assert_allclose(np.asarray(got[name]),
+                                       np.asarray(ref[name]),
+                                       rtol=2e-5, atol=1e-6,
+                                       err_msg=f"{target}:{name}")
+
+
+def test_two_head_serialize_round_trip_preserves_signature(rng):
+    """Acceptance: a two-output traced model round-trips through
+    serialize/deserialize with its Signature intact."""
+    g = _two_head(rng)
+    exe = repro.compile(g, target="jit")
+    assert exe.signature.output_names == ("probs", "embed")
+    exe2 = repro.deserialize(exe.serialize())
+    assert exe2.signature == exe.signature
+    x = rng.standard_normal((1, 8, 8, 3)).astype(np.float32)
+    a, b = exe(x), exe2(x)
+    assert list(a) == list(b) == ["probs", "embed"]
+    for name in a:
+        np.testing.assert_array_equal(np.asarray(a[name]),
+                                      np.asarray(b[name]))
+
+
+def test_container_round_trip_preserves_output_names(rng, tmp_path):
+    g = _two_head(rng)
+    path = str(tmp_path / "two_head.npz")
+    save_model(g, path)
+    g2 = load_model(path)
+    assert g2.output_names == ["probs", "embed"]
+    assert g2.outputs == g.outputs
+    assert g2.signature() == g.signature()
+
+
+def test_signature_in_cache_key(rng):
+    """Renaming outputs must change the persistent-cache key: the
+    public contract is part of what is cached."""
+    g = _two_head(rng)
+    g2 = g.copy()
+    g2.set_outputs(dict(zip(["p2", "e2"], g.outputs)))
+    k1 = repro.compile(g, target="jit")._key(1)
+    k2 = repro.compile(g2, target="jit")._key(1)
+    assert k1 != k2
+
+
+def test_positional_or_keyword_binding(rng):
+    w = rng.standard_normal((3, 2)).astype(np.float32)
+    g = repro.trace(lambda a, b: (a + b) @ w, (3,), (3,))
+    exe = repro.compile(g, target="jit")
+    a = rng.standard_normal((2, 3)).astype(np.float32)
+    b = rng.standard_normal((2, 3)).astype(np.float32)
+    want = np.asarray(exe(a=a, b=b)["output"])
+    np.testing.assert_array_equal(np.asarray(exe(a, b)["output"]), want)
+    np.testing.assert_array_equal(np.asarray(exe(a, b=b)["output"]), want)
+    with pytest.raises(TypeError, match="multiple values"):
+        exe(a, a=a, b=b)
+    with pytest.raises(TypeError, match="positional"):
+        exe(a, b, a)
+    with pytest.raises(ValueError, match="missing inputs"):
+        exe(a)
+    with pytest.raises(TypeError, match="unexpected inputs"):
+        exe(a, b, c=a)
+
+
+# ------------------------------------------------------------ the registry
+def test_compile_bare_callable_with_example_inputs(rng):
+    w = rng.standard_normal((4, 2)).astype(np.float32)
+    x = rng.standard_normal((3, 4)).astype(np.float32)
+    exe = repro.compile(lambda v: F.relu(v @ w), example_inputs=(x,),
+                        target="jit")
+    np.testing.assert_allclose(np.asarray(exe(x)["output"]),
+                               np.maximum(x @ w, 0), rtol=1e-5)
+    with pytest.raises(TypeError, match="example_inputs"):
+        repro.compile(lambda v: v)                # no shapes to trace with
+
+
+def test_compile_unknown_model_lists_frontends():
+    with pytest.raises(TypeError) as ei:
+        repro.compile(42)
+    msg = str(ei.value)
+    for name in available_frontends():
+        assert name in msg
+
+
+def test_compile_builder_and_container_frontends(rng, tmp_path):
+    mb = ModelBuilder().seed(0)
+    out = mb.dense(mb.input((4,)), 2)
+    with pytest.raises(TypeError, match="outputs"):
+        repro.compile(mb)                         # outputs not set yet
+    exe = repro.compile(mb, outputs=[out], target="jit")
+    x = rng.standard_normal((2, 4)).astype(np.float32)
+    want = np.asarray(exe(x)[out])
+
+    path = str(tmp_path / "m.npz")
+    save_model(mb.graph, path)
+    exe2 = repro.compile(path, target="jit")      # container frontend
+    np.testing.assert_array_equal(np.asarray(exe2(x)[out]), want)
+
+    # frontend options that the chosen frontend does not consume are
+    # rejected, not silently ignored
+    with pytest.raises(TypeError, match="example_inputs"):
+        repro.compile(path, example_inputs=(x,))
+
+
+def test_register_custom_frontend(rng):
+    """Third-party model formats plug in exactly like targets/passes."""
+
+    class LinearSpec(dict):
+        pass
+
+    @register_frontend("linear-spec")
+    class LinearFrontend(Frontend):
+        def accepts(self, model):
+            return isinstance(model, LinearSpec)
+
+        def to_graph(self, model, **kw):
+            return repro.trace(lambda x: x @ model["w"],
+                               model["in_shape"])
+
+    try:
+        assert "linear-spec" in available_frontends()
+        w = rng.standard_normal((3, 2)).astype(np.float32)
+        exe = repro.compile(LinearSpec(w=w, in_shape=(3,)), target="jit")
+        x = rng.standard_normal((2, 3)).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(exe(x)["output"]),
+                                   x @ w, rtol=1e-5)
+    finally:
+        from repro import frontends
+        frontends._FRONTENDS.pop("linear-spec", None)
+
+
+def test_keras_like_shims_warn_once():
+    import repro.core.keras_like as kl
+    g = repro.trace(lambda x: F.relu(x), (4,))
+    import io
+    kl._warned = False
+    buf = io.BytesIO()
+    with pytest.warns(DeprecationWarning, match="frontends.container"):
+        kl.save_model(g, buf)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        buf.seek(0)
+        kl.load_model(buf)
+    assert not any(issubclass(w.category, DeprecationWarning)
+                   for w in caught)
+
+
+# ------------------------------------------------ incremental construction
+def test_builder_construction_is_incremental(monkeypatch):
+    """The O(n²) fix: building N layers runs shape inference O(N) times
+    total, not O(N) times per layer."""
+    calls = {"n": 0}
+    orig = Graph._infer_node
+
+    def counting(self, node, specs):
+        calls["n"] += 1
+        return orig(self, node, specs)
+
+    monkeypatch.setattr(Graph, "_infer_node", counting)
+    layers = 30
+    mb = ModelBuilder().seed(0)
+    h = mb.input((16,))
+    for _ in range(layers):
+        h = mb.dense(h, 16, activation="relu")
+    mb.build([h])
+    # one incremental inference per node (dense+activation per layer),
+    # not a full re-walk per layer (which would be quadratic: >900)
+    assert calls["n"] <= 2 * layers + 5
+
+
+def test_spec_cache_invalidated_on_mutation():
+    mb = ModelBuilder().seed(0)
+    h = mb.dense(mb.input((4,)), 6)
+    g = mb.build([h])
+    assert g.spec(h).shape == (6,)
+    # out-of-band mutation: widen the kernel, then rebuild_index —
+    # the cache must not serve the stale (6,) spec
+    g.params["dense_1/kernel"] = np.zeros((4, 8), np.float32)
+    g.params["dense_1/bias"] = np.zeros(8, np.float32)
+    g.rebuild_index()
+    assert g.spec(h).shape == (8,)
+    assert g.infer_shapes()[h].shape == (8,)
+
+
+def test_builder_named_multi_outputs(rng):
+    mb = ModelBuilder().seed(1)
+    x = mb.input((6,))
+    a = mb.dense(x, 3)
+    b = mb.dense(x, 2)
+    g = mb.build({"left": a, "right": b})
+    assert g.output_names == ["left", "right"]
+    exe = repro.compile(g, target="interpret")
+    out = exe(rng.standard_normal((1, 6)).astype(np.float32))
+    assert list(out) == ["left", "right"]
+    assert out["left"].shape == (1, 3) and out["right"].shape == (1, 2)

@@ -258,6 +258,53 @@ def test_pop_completions_streams(setup):
     assert len(sched.done) == 2
 
 
+# --------------------------------------------------- named multi-inputs
+def test_request_named_multi_inputs():
+    """A serve() request can carry the model signature's non-token
+    inputs by name (audio frames here); they reach prefill verbatim
+    and actually change the decode."""
+    cfg = get_config("whisper-base", smoke=True)
+    m = get_model(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    frames = np.random.default_rng(0).standard_normal(
+        (cfg.n_frames, cfg.d_model)).astype(np.float32)   # batch-less
+
+    sched = _sched(m, params, slots=1, max_len=32)
+    batch = sched._prefill_batch(np.arange(4, dtype=np.int32)[None],
+                                 {"frames": frames})
+    assert sorted(batch) == ["frames", "tokens"]
+    np.testing.assert_array_equal(np.asarray(batch["frames"][0]), frames)
+    with pytest.raises(ValueError, match="expected"):
+        sched._prefill_batch(np.arange(4, dtype=np.int32)[None],
+                             {"frames": frames[: cfg.n_frames // 2]})
+
+    # zeros vs real frames change the prefill logits...
+    prompt = np.arange(4, dtype=np.int32)[None]
+    logits_zero, _ = sched._prefill(
+        params, sched._prefill_batch(prompt, None), m.init_cache(1, 32))
+    logits_real, _ = sched._prefill(
+        params, sched._prefill_batch(prompt, {"frames": frames}),
+        m.init_cache(1, 32))
+    assert not np.allclose(np.asarray(logits_zero), np.asarray(logits_real))
+
+    # ...and a request carrying them runs end to end
+    s = _sched(m, params, slots=1, max_len=32)
+    s.submit(Request(uid=0, prompt=np.arange(4) % cfg.vocab,
+                     max_new_tokens=4, inputs={"frames": frames}))
+    assert len(s.run()[0].tokens) == 4
+
+    # names outside the model's signature — and wrong shapes — are
+    # rejected at submit, before the request can enter the step loop
+    sched2 = _sched(m, params, slots=1, max_len=32)
+    with pytest.raises(ValueError, match="unknown inputs"):
+        sched2.submit(Request(uid=1, prompt=np.arange(4) % cfg.vocab,
+                              inputs={"patches": frames}))
+    with pytest.raises(ValueError, match="expected"):
+        sched2.submit(Request(uid=2, prompt=np.arange(4) % cfg.vocab,
+                              inputs={"frames": frames[:3]}))
+    assert sched2.queue_depth() == 0              # nothing got enqueued
+
+
 def test_pop_completions_purge_frees_state_and_uids(setup):
     """A long-running server drains with purge=True: per-request state
     is released and finished uids become reusable."""
