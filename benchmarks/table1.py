@@ -40,7 +40,9 @@ def _time_call(fn, *args, reps=20, warmup=3) -> float:
 
 
 def run(reps: int = 20,
-        configs: Optional[Sequence[str]] = None
+        configs: Optional[Sequence[str]] = None,
+        autotune: bool = False,
+        autotune_budget_ms: float = 250.0
         ) -> Dict[str, Dict[str, float]]:
     if configs:
         unknown = sorted(set(configs) - set(SUITE))
@@ -83,6 +85,34 @@ def run(reps: int = 20,
             "compile_time_ms": (exe.compile_time or 0) * 1e3,
             "max_abs_err": err,
         }
+
+        if autotune:
+            # Both pallas modes side by side: the heuristic selector's
+            # program vs. the profile-guided (autotune="full") one.
+            # Same reps for both rows — the min-of-reps estimator only
+            # drops with more samples, so unequal reps would bias the
+            # comparison toward whichever row got more.
+            heur = repro.compile(g, repro.CompileOptions(target="pallas"))
+            fn_h = heur.ensure_compiled(batch_size=1)
+            t_heur = _time_call(lambda x=x: fn_h(x), reps=reps)
+
+            tuned = repro.compile(g, repro.CompileOptions(
+                target="pallas", autotune="full",
+                autotune_budget_ms=autotune_budget_ms))
+            fn_t = tuned.ensure_compiled(batch_size=1)
+            t_tuned = _time_call(lambda x=x: fn_t(x), reps=reps)
+
+            tuned_out = np.asarray(tuned(**{in_name: x})[out_name])
+            tuned_err = float(np.max(np.abs(want - tuned_out)))
+            rows[name].update({
+                "pallas_heuristic_ms": t_heur * 1e3,
+                "pallas_autotuned_ms": t_tuned * 1e3,
+                "autotune_speedup": t_simple / t_tuned,
+                "autotune_max_abs_err": tuned_err,
+                # the gate's numeric ceiling covers whichever path the
+                # run actually exercised
+                "max_abs_err": max(err, tuned_err),
+            })
     return rows
 
 
@@ -91,23 +121,41 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
     ap.add_argument("--configs", nargs="*", metavar="NAME",
                     help=f"subset of {sorted(SUITE)} (default: all)")
     ap.add_argument("--reps", type=int, default=20)
+    ap.add_argument("--autotune", action="store_true",
+                    help="also run the pallas target in both modes — "
+                         "heuristic selector vs autotune='full' — so the "
+                         "table reads side by side")
+    ap.add_argument("--autotune-budget-ms", type=float, default=250.0,
+                    help="per-compile measurement budget for --autotune "
+                         "(default 250); set $REPRO_CACHE_DIR to persist "
+                         "tactics across runs")
     ap.add_argument("--json", metavar="PATH",
                     help="also write rows + environment as a BENCH_*.json "
                          "artifact (the CI perf-trajectory format)")
     args = ap.parse_args(argv)
 
-    rows = run(reps=args.reps, configs=args.configs)
+    rows = run(reps=args.reps, configs=args.configs,
+               autotune=args.autotune,
+               autotune_budget_ms=args.autotune_budget_ms)
     hdr = f"{'model':<12} {'interp ms':>10} {'compiled ms':>12} " \
           f"{'speedup':>8} {'compile ms':>11} {'max err':>9}"
+    if args.autotune:
+        hdr += f" {'pallas ms':>10} {'tuned ms':>9} {'tuned x':>8}"
     print(hdr)
     print("-" * len(hdr))
     for name, r in rows.items():
-        print(f"{name:<12} {r['interpreted_ms']:>10.3f} "
-              f"{r['compiled_ms']:>12.3f} {r['speedup']:>8.1f} "
-              f"{r['compile_time_ms']:>11.1f} {r['max_abs_err']:>9.2e}")
+        line = (f"{name:<12} {r['interpreted_ms']:>10.3f} "
+                f"{r['compiled_ms']:>12.3f} {r['speedup']:>8.1f} "
+                f"{r['compile_time_ms']:>11.1f} {r['max_abs_err']:>9.2e}")
+        if args.autotune:
+            line += (f" {r['pallas_heuristic_ms']:>10.3f} "
+                     f"{r['pallas_autotuned_ms']:>9.3f} "
+                     f"{r['autotune_speedup']:>8.1f}")
+        print(line)
     if args.json:
         doc = {
             "bench": "table1",
+            "autotune": bool(args.autotune),
             "rows": rows,
             "env": {
                 "jax": jax.__version__,

@@ -13,6 +13,7 @@ import json
 from typing import Optional, Tuple
 
 PRECISIONS = ("exact", "fast")
+AUTOTUNE_MODES = ("off", "cached", "full")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +43,18 @@ class CompileOptions:
                    (one ``NN-<pass>.txt`` summary per stage) or ``"-"``
                    for stderr.  ``None`` falls back to
                    ``$REPRO_DUMP_IR``; unset disables.
+    autotune:      profile-guided kernel selection (``repro.autotune``).
+                   ``"off"`` (default): the static heuristic selector,
+                   bit-identical to the pre-autotuner compiler.
+                   ``"cached"``: use measured tactics from the
+                   persistent tactic cache where present; heuristic
+                   otherwise — never measures.  ``"full"``: additionally
+                   micro-benchmark candidates for uncached shapes and
+                   record the winners.
+    autotune_budget_ms: wall-clock budget for ``"full"`` measurement per
+                   compile (candidate jit compiles included); shapes the
+                   budget doesn't reach fall back to the heuristic.
+                   ``None`` = unlimited.
     """
 
     target: str = "jit"
@@ -52,11 +65,24 @@ class CompileOptions:
     donate_inputs: bool = False
     cache_dir: Optional[str] = None
     dump_ir: Optional[str] = None
+    autotune: str = "off"
+    autotune_budget_ms: Optional[float] = 1000.0
 
     def __post_init__(self) -> None:
         if self.precision not in PRECISIONS:
             raise ValueError(
                 f"precision must be one of {PRECISIONS}, got {self.precision!r}"
+            )
+        if self.autotune not in AUTOTUNE_MODES:
+            raise ValueError(
+                f"autotune must be one of {AUTOTUNE_MODES}, "
+                f"got {self.autotune!r}"
+            )
+        if (self.autotune_budget_ms is not None
+                and self.autotune_budget_ms <= 0):
+            raise ValueError(
+                f"autotune_budget_ms must be positive or None, "
+                f"got {self.autotune_budget_ms!r}"
             )
         if self.passes is not None:
             object.__setattr__(self, "passes", tuple(self.passes))
@@ -87,10 +113,17 @@ class CompileOptions:
         what is cached), so is ``batch_buckets`` (the per-batch program
         is identical however the caller buckets; the batch size itself
         is a separate key component), and so is ``dump_ir`` (a debugging
-        side channel, not a codegen choice).
+        side channel, not a codegen choice).  The ``autotune`` fields
+        are excluded too: what actually changes the generated code is
+        the *resolved kernel selection*, which the executable cache key
+        mixes in separately — so an autotuned compile whose measurements
+        land on the heuristic's choices shares the heuristic's cached
+        executable.
         """
         d = self.to_dict()
         d.pop("cache_dir")
         d.pop("batch_buckets")
         d.pop("dump_ir")
+        d.pop("autotune")
+        d.pop("autotune_budget_ms")
         return json.dumps(d, sort_keys=True, default=str)

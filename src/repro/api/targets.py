@@ -21,6 +21,7 @@ from __future__ import annotations
 import functools
 import hashlib
 import io
+import json
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -172,6 +173,7 @@ class JitExecutable(GraphExecutable):
         self._pass_time = time.perf_counter() - t0
         self._fns: Dict[int, Callable] = {}
         self._selections: Dict[int, Dict[str, KernelChoice]] = {}
+        self._autotune_reports: Dict[int, dict] = {}
         self._disk = open_cache(options.cache_dir)
         self._xla_cost: Optional[dict] = None
         self._weights_digest_memo: Optional[str] = None
@@ -192,12 +194,27 @@ class JitExecutable(GraphExecutable):
             self._weights_digest_memo = h.hexdigest()
         return self._weights_digest_memo
 
-    def _key(self, batch_size: int) -> str:
+    @staticmethod
+    def _selection_token(selection: Dict[str, KernelChoice]) -> str:
+        """Stable digest of the *resolved* kernel selection (kernel +
+        block geometry per node).  Mixing this into the executable-cache
+        key — instead of the autotune mode — means two compiles that
+        resolve to the same kernels share one cached executable, and a
+        new tactic measurement (different winner or block) misses
+        cleanly instead of serving the old program."""
+        payload = json.dumps(
+            sorted((name, c.kernel, list(c.block) if c.block else None)
+                   for name, c in selection.items()))
+        return hashlib.sha256(payload.encode()).hexdigest()
+
+    def _key(self, batch_size: int,
+             selection: Optional[Dict[str, KernelChoice]] = None) -> str:
         weights = self._weights_digest() if self.options.embed_weights else ""
         return cache_key(self.graph.structure_hash(), weights,
                          self.options.cache_token(), f"batch={batch_size}",
                          f"sig={self.signature.cache_token()}",
-                         f"rules={lowering_fingerprint(self.lowering_target)}")
+                         f"rules={lowering_fingerprint(self.lowering_target)}",
+                         f"sel={self._selection_token(selection or {})}")
 
     # -- compilation ---------------------------------------------------
     def ensure_compiled(self, batch_size: int = 1) -> Callable:
@@ -215,6 +232,18 @@ class JitExecutable(GraphExecutable):
             self.graph, batch_size=batch_size,
             target=self.lowering_target,
             precision=self.options.precision)
+        if selection and self.options.autotune != "off":
+            # Profile-guided refinement: measured tactics override the
+            # heuristic prior; any failure leaves the prior untouched.
+            from ..autotune import open_tactic_cache, tune_selection
+            selection, report = tune_selection(
+                self.graph, selection,
+                batch_size=batch_size,
+                precision=self.options.precision,
+                mode=self.options.autotune,
+                budget_ms=self.options.autotune_budget_ms,
+                cache=open_tactic_cache(self.options.cache_dir))
+            self._autotune_reports[batch_size] = report
         if selection:   # targets without kernel decisions stay silent
             self._selections[batch_size] = selection
         lower_kw = dict(precision=self.options.precision,
@@ -247,7 +276,7 @@ class JitExecutable(GraphExecutable):
             wrap = lambda exe: functools.partial(exe, params)
 
         jitted = jax.jit(program, donate_argnums=donate)
-        key = self._key(batch_size)
+        key = self._key(batch_size, selection)
         exe = self._disk.load(key) if self._disk else None
         if exe is None:
             exe = jitted.lower(*specs).compile()
@@ -312,10 +341,17 @@ class JitExecutable(GraphExecutable):
             "memory_plan": self.report["memory_plan"],
         }
         if self._selections:
-            # Kernel-selector decisions, per compiled batch size.
+            # Kernel-selector decisions, per compiled batch size; each
+            # entry carries source ("heuristic"|"measured"), the block
+            # geometry, and — for measured tactics — per-candidate µs.
             out["kernel_selection"] = {
                 batch: [c.to_dict() for c in sel.values()]
                 for batch, sel in sorted(self._selections.items())
+            }
+        if self._autotune_reports:
+            out["autotune"] = {
+                batch: rep
+                for batch, rep in sorted(self._autotune_reports.items())
             }
         if self._xla_cost:
             out["xla"] = {k: self._xla_cost[k]

@@ -1,0 +1,35 @@
+"""repro.autotune — profile-guided kernel autotuning.
+
+The static selector (``repro.core.selection``) encodes "statically known
+properties of the network" as hand-written heuristics; this package
+replaces the guess with a measurement where one is available.  Per
+``(op, shapes, dtype, batch, target)`` key it enumerates candidate
+tactics (registered kernel lowerings × block geometries), benchmarks
+them with the min-of-reps estimator, and records the winner in a
+persistent on-disk tactic cache — measure once, remember forever.
+
+Driven by ``CompileOptions(autotune="off"|"cached"|"full",
+autotune_budget_ms=…)``; see :mod:`repro.autotune.tuner` for the pass
+and :mod:`repro.autotune.cache` for the cache/fingerprint contract.
+"""
+
+from .cache import (TACTICS_SUBDIR, TacticCache, environment_fingerprint,
+                    open_tactic_cache, tactic_key)
+from .measure import Deadline, bench_min_us
+from .tactics import NodeTactics, Tactic, candidates_for_node
+from .tuner import AUTOTUNE_MODES, tune_selection
+
+__all__ = [
+    "AUTOTUNE_MODES",
+    "Deadline",
+    "NodeTactics",
+    "TACTICS_SUBDIR",
+    "Tactic",
+    "TacticCache",
+    "bench_min_us",
+    "candidates_for_node",
+    "environment_fingerprint",
+    "open_tactic_cache",
+    "tactic_key",
+    "tune_selection",
+]

@@ -1,0 +1,148 @@
+"""Persistent on-disk tactic cache — measure once, remember forever.
+
+The executable cache (``repro.api.cache``) amortizes *XLA compilation*
+across processes; this cache amortizes *measurement*.  A tactic entry
+records, for one ``(op, shapes, dtype, batch, target, precision)`` key,
+which kernel implementation (and block geometry) won the micro-benchmark
+and what every candidate measured, so a second process compiling the
+same shapes gets the measured winner without re-benchmarking.
+
+Keys are fingerprinted like the executable cache's: the digest mixes in
+the jax version, the backend platform, and the effective Pallas
+lowering-rule fingerprint, so editing a kernel or upgrading jax misses
+cleanly instead of serving a stale winner.  The fingerprint is *also*
+stored inside each entry and re-validated on load — a file copied
+between environments degrades to a heuristic fallback, never a wrong
+tactic.  Entries are plain JSON (human-inspectable: ``cat`` one to see
+why a kernel won); any parse/validation failure drops the entry and
+falls back to the heuristic — never to an error.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import tempfile
+from typing import Any, Dict, Mapping, Optional
+
+import jax
+
+from ..api.cache import resolve_cache_dir
+
+TACTIC_FORMAT_VERSION = 1
+
+#: Subdirectory of the shared cache root (``$REPRO_CACHE_DIR`` or the
+#: explicit ``CompileOptions.cache_dir``) holding tactic entries.
+TACTICS_SUBDIR = "tactics"
+
+
+def environment_fingerprint() -> str:
+    """Everything environmental that invalidates a measurement: jax
+    version, backend platform, and the Pallas lowering-rule set (editing
+    a kernel body changes what a "pallas.*" tactic means)."""
+    from ..core.lowering import lowering_fingerprint
+
+    h = hashlib.sha256()
+    for p in (f"v{TACTIC_FORMAT_VERSION}", jax.__version__,
+              jax.default_backend(), lowering_fingerprint("pallas")):
+        h.update(p.encode())
+        h.update(b"\x00")
+    return h.hexdigest()
+
+
+def tactic_key(desc: Mapping[str, Any], fingerprint: Optional[str] = None
+               ) -> str:
+    """Digest of a tactic descriptor (the per-shape identity of one
+    kernel decision) plus the environment fingerprint."""
+    fp = fingerprint if fingerprint is not None else environment_fingerprint()
+    payload = json.dumps(desc, sort_keys=True, default=str)
+    return hashlib.sha256(f"{fp}\x00{payload}".encode()).hexdigest()
+
+
+class TacticCache:
+    """JSON-per-entry directory cache of measured tactic winners."""
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        self.hits = 0
+        self.misses = 0
+        self.stores = 0
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.json")
+
+    def load(self, key: str, fingerprint: Optional[str] = None
+             ) -> Optional[Dict[str, Any]]:
+        """Return a validated tactic entry, or None on miss/corruption/
+        staleness (corrupt files are removed so they stop costing a
+        parse on every compile)."""
+        path = self._path(key)
+        if not os.path.exists(path):
+            self.misses += 1
+            return None
+        try:
+            with open(path) as f:
+                entry = json.load(f)
+            if not isinstance(entry, dict):
+                raise ValueError("tactic entry is not an object")
+            if not isinstance(entry.get("winner"), str):
+                raise ValueError("tactic entry has no winner")
+            fp = (fingerprint if fingerprint is not None
+                  else environment_fingerprint())
+            if entry.get("fingerprint") != fp:
+                # Stale (copied from another environment / edited
+                # kernels): ignore but keep the file — it may be valid
+                # for the environment that wrote it.
+                self.misses += 1
+                return None
+            if entry.get("block") is not None:
+                entry["block"] = tuple(int(b) for b in entry["block"])
+            self.hits += 1
+            return entry
+        except Exception:
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            self.misses += 1
+            return None
+
+    def store(self, key: str, entry: Dict[str, Any]) -> bool:
+        """Write ``entry`` under ``key``; atomic via rename so two
+        processes tuning the same shapes never interleave bytes."""
+        try:
+            blob = json.dumps(entry, indent=2, sort_keys=True, default=str)
+        except (TypeError, ValueError):
+            return False
+        fd, tmp = tempfile.mkstemp(dir=self.root, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                f.write(blob)
+            os.replace(tmp, self._path(key))
+            self.stores += 1
+            return True
+        except OSError:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            return False
+
+    def stats(self) -> dict:
+        return {"dir": self.root, "hits": self.hits, "misses": self.misses,
+                "stores": self.stores}
+
+
+def open_tactic_cache(explicit_dir: Optional[str]) -> Optional[TacticCache]:
+    """Tactic cache under ``<cache root>/tactics``; same resolution as
+    the executable cache (explicit option, else ``$REPRO_CACHE_DIR``,
+    else disabled)."""
+    root = resolve_cache_dir(explicit_dir)
+    if not root:
+        return None
+    try:
+        return TacticCache(os.path.join(root, TACTICS_SUBDIR))
+    except OSError:
+        return None

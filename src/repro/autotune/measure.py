@@ -1,0 +1,68 @@
+"""Micro-benchmark primitive for the autotuner.
+
+Same estimator as ``benchmarks/table1.py``: the **minimum** of per-rep
+wall times, which is robust to scheduler hiccups and GC pauses that
+dominate sub-millisecond means on shared machines — and the perf gate
+already depends on that estimator being stable, so tactic decisions use
+the same lens CI judges them through.
+
+Every candidate costs a jit compile before its first rep; the compile is
+excluded from the timing but *counted against the tuning deadline*, so
+``autotune_budget_ms`` bounds real wall-clock, not just steady-state
+reps.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+
+
+def now_ms() -> float:
+    return time.perf_counter() * 1e3
+
+
+class Deadline:
+    """Wall-clock budget shared across every candidate of a tuning
+    pass.  ``None`` budget = unlimited."""
+
+    def __init__(self, budget_ms: Optional[float]) -> None:
+        self.start_ms = now_ms()
+        self.budget_ms = budget_ms
+
+    def spent_ms(self) -> float:
+        return now_ms() - self.start_ms
+
+    def expired(self) -> bool:
+        return (self.budget_ms is not None
+                and self.spent_ms() >= self.budget_ms)
+
+
+def bench_min_us(fn: Callable, args: Sequence, *, reps: int = 5,
+                 warmup: int = 1,
+                 deadline: Optional[Deadline] = None) -> Optional[float]:
+    """Min-of-reps wall time of ``fn(*args)`` in microseconds.
+
+    Returns None if the candidate fails to run (e.g. a Pallas geometry
+    the backend rejects) or the deadline expires before a single timed
+    rep completes — the caller treats None as "not a viable tactic".
+    """
+    try:
+        for _ in range(max(1, warmup)):   # first call pays the compile
+            jax.block_until_ready(fn(*args))
+            if deadline is not None and deadline.expired():
+                return None
+        best = None
+        for _ in range(max(1, reps)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            dt = time.perf_counter() - t0
+            if best is None or dt < best:
+                best = dt
+            if deadline is not None and deadline.expired():
+                break
+        return best * 1e6 if best is not None else None
+    except Exception:
+        return None

@@ -1,0 +1,221 @@
+"""Tactic enumeration: what the autotuner can choose between, per op.
+
+A *tactic* is one concrete implementation of a node: a kernel name (the
+same names the static selector uses — ``"pallas.fused_matmul"``,
+``"lax.dot"``, …) plus an optional block geometry.  For every node the
+static selector has an opinion about, :func:`candidates_for_node` builds
+the tactic key (the per-shape identity the cache is keyed by) and a list
+of runnable candidates:
+
+* ``dense`` — the stock lax reference vs. the fused Pallas matmul at
+  each geometry from :func:`repro.kernels.tiles.enumerate_blocks`
+  (TensorRT-style: the heuristic's block is just candidate #0);
+* ``activation`` under ``precision="fast"`` — the jnp fast reference
+  vs. the Pallas fast-act kernel at a few row-block heights (exact
+  precision has exactly one legal implementation, so there is nothing
+  to tune);
+* ``decode_attention`` — the jnp reference vs. the Pallas online-softmax
+  kernel at a few KV tile depths.
+
+Candidates are *measured on synthetic data shaped exactly like the
+node's operands* — deterministic seed, so a tactic key measures the
+same problem in every process.  Candidates never differ in semantics
+beyond what the static selector already allows (the fast-act kernel is
+only a candidate where fast precision already applies), so autotuning
+changes performance, not numerics classes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.tiles import LANE, enumerate_blocks
+from ..kernels.fused_matmul.ops import fused_matmul
+from ..kernels.fast_act.ops import fast_act
+from ..kernels.fast_act import ref as fast_ref
+from ..kernels.decode_attention.ops import decode_attention
+from ..kernels.decode_attention import ref as attn_ref
+
+#: Row-block heights swept for the fast-act kernel (cols are always one
+#: 128-wide lane tile).
+FAST_ACT_ROW_BLOCKS = (128, 256, 512)
+#: KV-tile depths swept for decode attention.
+DECODE_BS_CANDIDATES = (128, 256, 512, 1024)
+
+
+@dataclasses.dataclass(frozen=True)
+class Tactic:
+    """One implementation choice: kernel name + optional geometry."""
+
+    kernel: str
+    block: Optional[Tuple[int, ...]] = None
+
+    @property
+    def label(self) -> str:
+        if self.block is None:
+            return self.kernel
+        return f"{self.kernel}[{'x'.join(str(b) for b in self.block)}]"
+
+
+#: A runnable candidate: the tactic plus a jitted callable and its args.
+Candidate = Tuple[Tactic, Callable, Sequence]
+
+
+@dataclasses.dataclass(frozen=True)
+class NodeTactics:
+    """Everything the tuner needs for one node: the cache-key
+    descriptor and a lazy candidate builder (array allocation + jit
+    wrapping deferred until the budget says we actually measure)."""
+
+    desc: Dict
+    make_candidates: Callable[[], List[Candidate]]
+
+
+def _rng_array(rng, shape, dtype="float32"):
+    # Cast through jnp (numpy has no bfloat16): candidates must be
+    # measured on the dtype the tactic key describes, or a bf16 key
+    # would record the timings of a different (f32) problem.
+    a = rng.standard_normal(shape).astype(np.float32)
+    return jnp.asarray(a).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense
+# ---------------------------------------------------------------------------
+def _dense_tactics(node, graph, in_spec, batch_size: int,
+                   precision: str) -> NodeTactics:
+    rows = max(1, in_spec.size // max(1, in_spec.shape[-1]))
+    m = batch_size * rows
+    kshape = graph.params[node.params["kernel"]].shape
+    layout = node.attrs.get("kernel_layout", "io")
+    # Measure the physical problem the kernel runs (post-layout padding),
+    # not the logical one — geometry legality depends on the real W.
+    k, n = (kshape[1], kshape[0]) if layout == "oi" else (kshape[0], kshape[-1])
+    fn = node.epilogue if node.epilogue not in (None, "linear", "softmax") else None
+    has_bias = "bias" in node.params
+    has_affine = node.epilogue_attrs.get("post_affine") is not None
+    fast = precision == "fast"
+    itemsize = int(np.dtype(in_spec.dtype).itemsize)
+    desc = {"op": "dense", "m": m, "k": k, "n": n, "dtype": in_spec.dtype,
+            "batch": batch_size, "target": "pallas", "epilogue": fn or "",
+            "has_bias": has_bias, "has_affine": has_affine,
+            "w_layout": layout, "fast": fast}
+
+    def make() -> List[Candidate]:
+        rng = np.random.default_rng(0)
+        x = _rng_array(rng, (m, k), in_spec.dtype)
+        w = _rng_array(rng, (n, k) if layout == "oi" else (k, n),
+                       in_spec.dtype)
+        b = _rng_array(rng, (n,)) if has_bias else None
+        s = _rng_array(rng, (n,)) if has_affine else None
+        o = _rng_array(rng, (n,)) if has_affine else None
+
+        def runner(use_pallas: bool, block):
+            return jax.jit(functools.partial(
+                fused_matmul, fn=fn, fast=fast, w_layout=layout,
+                use_pallas=use_pallas, block=block))
+
+        cands: List[Candidate] = [
+            (Tactic("lax.dot"), runner(False, None), (x, w, b, s, o))]
+        for blk in enumerate_blocks(m, k, n, itemsize):
+            cands.append((Tactic("pallas.fused_matmul", blk),
+                          runner(True, blk), (x, w, b, s, o)))
+        return cands
+
+    return NodeTactics(desc, make)
+
+
+# ---------------------------------------------------------------------------
+# activation (fast precision only — exact has one implementation)
+# ---------------------------------------------------------------------------
+def _activation_tactics(node, in_spec, batch_size: int) -> Optional[NodeTactics]:
+    fn = node.attrs["fn"]
+    if fn not in ("tanh", "sigmoid"):
+        return None
+    shape = (batch_size,) + tuple(in_spec.shape)
+    desc = {"op": "activation", "fn": fn, "shape": list(shape),
+            "dtype": in_spec.dtype, "batch": batch_size, "target": "pallas",
+            "fast": True}
+
+    def make() -> List[Candidate]:
+        rng = np.random.default_rng(0)
+        x = _rng_array(rng, shape, in_spec.dtype)
+        cands: List[Candidate] = [
+            (Tactic("jnp.act"), jax.jit(fast_ref.FAST[fn]), (x,))]
+        minor = shape[-1] if shape else 1
+        for rows in FAST_ACT_ROW_BLOCKS:
+            blk = (rows, min(LANE, minor))
+            cands.append((
+                Tactic("pallas.fast_act", blk),
+                jax.jit(functools.partial(fast_act, fn=fn, use_pallas=True,
+                                          block=blk)),
+                (x,)))
+        return cands
+
+    return NodeTactics(desc, make)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+def _decode_attention_tactics(node, specs, batch_size: int,
+                              precision: str) -> NodeTactics:
+    q_spec = specs[node.inputs[0]]
+    kv_spec = specs[node.inputs[1]]
+    h, d = q_spec.shape
+    s, hkv, _ = kv_spec.shape
+    fast = precision == "fast"
+    scale = node.attrs.get("scale")
+    desc = {"op": "decode_attention", "h": h, "d": d, "s": s, "hkv": hkv,
+            "dtype": q_spec.dtype, "batch": batch_size, "target": "pallas",
+            "fast": fast}
+
+    def make() -> List[Candidate]:
+        rng = np.random.default_rng(0)
+        q = _rng_array(rng, (batch_size, h, d), q_spec.dtype)
+        kc = _rng_array(rng, (batch_size, s, hkv, d), q_spec.dtype)
+        vc = _rng_array(rng, (batch_size, s, hkv, d), q_spec.dtype)
+        lengths = jnp.full((batch_size,), s, jnp.int32)
+
+        cands: List[Candidate] = [(
+            Tactic("jnp.ref"),
+            jax.jit(functools.partial(attn_ref.decode_attention_ref,
+                                      scale=scale, fast=fast)),
+            (q, kc, vc, lengths))]
+        if d % LANE == 0:
+            seen = set()
+            for bs in DECODE_BS_CANDIDATES:
+                eff = min(bs, s)
+                if eff in seen:
+                    continue
+                seen.add(eff)
+                cands.append((
+                    Tactic("pallas.decode_attention", (eff,)),
+                    jax.jit(functools.partial(decode_attention, scale=scale,
+                                              fast=fast, use_pallas=True,
+                                              bs=eff)),
+                    (q, kc, vc, lengths)))
+        return cands
+
+    return NodeTactics(desc, make)
+
+
+# ---------------------------------------------------------------------------
+def candidates_for_node(node, graph, specs, *, batch_size: int,
+                        precision: str) -> Optional[NodeTactics]:
+    """The tunable candidate set for one node, or None when the node has
+    a single legal implementation (nothing to measure)."""
+    in_spec = specs[node.inputs[0]] if node.inputs else None
+    if node.op == "dense":
+        return _dense_tactics(node, graph, in_spec, batch_size, precision)
+    if node.op == "activation" and precision == "fast":
+        return _activation_tactics(node, in_spec, batch_size)
+    if node.op == "decode_attention":
+        return _decode_attention_tactics(node, specs, batch_size, precision)
+    return None

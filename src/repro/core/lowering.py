@@ -103,6 +103,17 @@ class LoweringContext:
         choice = self.selection.get(node.name)
         return choice is None or choice.kernel == kernel
 
+    def tuned_block(self, node: Node):
+        """The autotuner's measured block geometry for this node, or
+        None.  Heuristic choices return None on purpose — the kernel
+        wrappers then recompute ``pick_block`` exactly as they always
+        have, keeping ``autotune="off"`` bit-identical to the
+        pre-autotuner compiler."""
+        choice = self.selection.get(node.name)
+        if choice is not None and choice.source == "measured":
+            return choice.block
+        return None
+
 
 LoweringRule = Callable[[Node, List[jnp.ndarray], LoweringContext], jnp.ndarray]
 
@@ -249,7 +260,7 @@ def _lower_constant(node, ins, ctx):
     return jnp.broadcast_to(v, (ctx.batch_size,) + tuple(v.shape))
 
 
-def _dense_impl(node, ins, ctx, use_pallas: bool):
+def _dense_impl(node, ins, ctx, use_pallas: bool, block=None):
     w = ctx.params[node.params["kernel"]]
     b = ctx.params[node.params["bias"]] if "bias" in node.params else None
     layout = node.attrs.get("kernel_layout", "io")
@@ -265,6 +276,7 @@ def _dense_impl(node, ins, ctx, use_pallas: bool):
         fast=ctx.precision == "fast",
         w_layout=layout,
         use_pallas=use_pallas,
+        block=block,
         attrs=node.epilogue_attrs,
     )
     if "orig_cout" in node.attrs:
@@ -400,13 +412,14 @@ def _lower_softmax(node, ins, ctx):
     return ctx.epilogue(node, ctx.act("softmax", ins[0], node.attrs))
 
 
-def _decode_attention_impl(node, ins, ctx, use_pallas: bool):
+def _decode_attention_impl(node, ins, ctx, use_pallas: bool, bs=None):
     lengths = ins[3] if len(ins) > 3 else None
     y = decode_attention_op(
         ins[0], ins[1], ins[2], lengths,
         scale=node.attrs.get("scale"),
         fast=ctx.precision == "fast",
         use_pallas=use_pallas,
+        bs=bs,
     )
     return ctx.epilogue(node, y)
 
@@ -424,7 +437,8 @@ def _lower_decode_attention(node, ins, ctx):
 @register_lowering("dense", target="pallas")
 def _lower_dense_pallas(node, ins, ctx):
     return _dense_impl(node, ins, ctx,
-                       use_pallas=ctx.wants(node, "pallas.fused_matmul"))
+                       use_pallas=ctx.wants(node, "pallas.fused_matmul"),
+                       block=ctx.tuned_block(node))
 
 
 @register_lowering("activation", target="pallas")
@@ -437,12 +451,15 @@ def _lower_activation_pallas(node, ins, ctx):
     if (ctx.precision == "fast" and choice is not None
             and choice.kernel == "pallas.fast_act"):
         return ctx.epilogue(node, fast_act(ins[0], node.attrs["fn"],
-                                           use_pallas=True))
+                                           use_pallas=True,
+                                           block=ctx.tuned_block(node)))
     return _lower_activation(node, ins, ctx)
 
 
 @register_lowering("decode_attention", target="pallas")
 def _lower_decode_attention_pallas(node, ins, ctx):
+    block = ctx.tuned_block(node)
     return _decode_attention_impl(
         node, ins, ctx,
-        use_pallas=ctx.wants(node, "pallas.decode_attention"))
+        use_pallas=ctx.wants(node, "pallas.decode_attention"),
+        bs=block[0] if block else None)

@@ -24,18 +24,26 @@ Decisions are returned as :class:`KernelChoice` records (kernel + the
 reason, human-readable) and surfaced through
 ``Executable.cost_summary()["kernel_selection"]`` so "why didn't my
 layer use the fused kernel?" is answerable without a debugger.
+
+These heuristics are the *prior*: with ``CompileOptions(autotune=
+"cached"|"full")`` the profile-guided tuner (:mod:`repro.autotune`)
+overrides individual choices with micro-benchmarked winners
+(``source="measured"``, tuned block geometry attached); with the
+default ``autotune="off"`` the decisions below are final and
+bit-identical to the pre-autotuner selector.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
+import numpy as np
 
 from .graph import Graph
-from ..kernels.tiles import (LANE, SUBLANE, VMEM_BUDGET_BYTES, ceil_to,
-                             pick_block)
+from ..kernels.tiles import (LANE, VMEM_BUDGET_BYTES, block_vmem_bytes,
+                             ceil_to, pick_block, sublane_for)
 
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 
@@ -48,14 +56,24 @@ MAX_PAD_WASTE = 1024.0
 
 @dataclasses.dataclass(frozen=True)
 class KernelChoice:
-    """One selector decision, as shown in ``cost_summary()``."""
+    """One selector decision, as shown in ``cost_summary()``.
+
+    ``source`` records whether the decision is the static heuristic's
+    prior or a micro-benchmarked winner from :mod:`repro.autotune`;
+    measured choices also carry the winning ``block`` geometry (honored
+    by the Pallas lowering rules instead of recomputing ``pick_block``)
+    and the per-candidate ``measured_us`` table.
+    """
 
     node: str
     op: str
     kernel: str   # e.g. "pallas.fused_matmul", "lax.dot", "jnp.ref"
     reason: str
+    source: str = "heuristic"          # "heuristic" | "measured"
+    block: Optional[Tuple[int, ...]] = None
+    measured_us: Optional[Dict[str, float]] = None
 
-    def to_dict(self) -> Dict[str, str]:
+    def to_dict(self) -> Dict[str, object]:
         return dataclasses.asdict(self)
 
 
@@ -63,13 +81,18 @@ def _select_dense(node, in_spec, batch_size: int, n: int) -> KernelChoice:
     rows = max(1, in_spec.size // max(1, in_spec.shape[-1]))
     m = batch_size * rows
     k = in_spec.shape[-1]
-    m_pad, k_pad, n_pad = ceil_to(m, SUBLANE), ceil_to(k, LANE), ceil_to(n, LANE)
+    # Granules and the VMEM working set are dtype-parametrized: bf16
+    # packs twice the elements per byte, so its sublane granule doubles
+    # and its K-dim block cap grows instead of idling half the budget.
+    itemsize = int(np.dtype(in_spec.dtype).itemsize)
+    sub = sublane_for(itemsize)
+    m_pad, k_pad, n_pad = ceil_to(m, sub), ceil_to(k, LANE), ceil_to(n, LANE)
 
-    bm, bk, bn = pick_block(m, k, n)
-    # VMEM legality: with today's pick_block caps (256/512/256) the
-    # working set always fits; this check is what *keeps* that true if
-    # the block geometry in kernels/tiles.py is ever retuned upward.
-    vmem = 4 * (bm * bk + bk * bn + 2 * bm * bn)
+    bm, bk, bn = pick_block(m, k, n, itemsize)
+    # VMEM legality: with today's pick_block caps the working set always
+    # fits; this check is what *keeps* that true if the block geometry
+    # in kernels/tiles.py is ever retuned upward.
+    vmem = block_vmem_bytes(bm, bk, bn, itemsize)
     if vmem > VMEM_BUDGET_BYTES:
         return KernelChoice(
             node.name, "dense", "lax.dot",
@@ -84,7 +107,8 @@ def _select_dense(node, in_spec, batch_size: int, n: int) -> KernelChoice:
     return KernelChoice(
         node.name, "dense", "pallas.fused_matmul",
         f"M={m} K={k} N={n} tiles to ({bm},{bk},{bn}), "
-        f"{vmem // 1024} KiB VMEM, {waste:.1f}x pad waste")
+        f"{vmem // 1024} KiB VMEM, {waste:.1f}x pad waste",
+        block=(bm, bk, bn))
 
 
 def _select_activation(node, in_spec, precision: str) -> KernelChoice:

@@ -22,7 +22,10 @@ def decode_attention(
     scale: Optional[float] = None,
     fast: bool = False,
     use_pallas: bool = False,
+    bs: Optional[int] = None,
 ) -> jnp.ndarray:
+    """``bs`` overrides the default KV-tile depth of the Pallas kernel
+    (the autotuner's measured geometry)."""
     b, _, _ = q.shape
     s = k_cache.shape[1]
     if lengths is None:
@@ -31,6 +34,7 @@ def decode_attention(
         return ref.decode_attention_ref(
             q, k_cache, v_cache, lengths, scale=scale, fast=fast
         )
+    kw = {} if bs is None else {"bs": int(bs)}
     return decode_attention_p(
         q.astype(jnp.float32),
         k_cache.astype(jnp.float32),
@@ -39,4 +43,5 @@ def decode_attention(
         scale=scale,
         fast=fast,
         interpret=not _ON_TPU,
+        **kw,
     )

@@ -51,16 +51,20 @@ def _elementwise_kernel(x_ref, o_ref, *, fn: str):
     o_ref[...] = _BODIES[fn](x_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("fn", "interpret"))
-def fast_act_2d(x: jnp.ndarray, fn: str, interpret: bool = True) -> jnp.ndarray:
+@functools.partial(jax.jit, static_argnames=("fn", "interpret", "block"))
+def fast_act_2d(x: jnp.ndarray, fn: str, interpret: bool = True,
+                block=None) -> jnp.ndarray:
     """Apply a fast activation to a 2D f32 array via Pallas.
 
     The wrapper pads to tile multiples (compile-time shapes, so the pad
-    is free to fuse) and slices back.
+    is free to fuse) and slices back.  ``block=(rows, cols)`` overrides
+    the default tile caps (the autotuner's measured geometry).
     """
     m, n = x.shape
-    bm = min(BLOCK_ROWS, max(8, m))
-    bn = min(BLOCK_COLS, max(128, n)) if n >= 128 else n
+    rows_cap, cols_cap = block if block is not None else (BLOCK_ROWS,
+                                                          BLOCK_COLS)
+    bm = min(rows_cap, max(8, m))
+    bn = min(cols_cap, max(128, n)) if n >= 128 else n
     pm = -(-m // bm) * bm
     pn = -(-n // bn) * bn
     xp = jnp.pad(x, ((0, pm - m), (0, pn - n)))

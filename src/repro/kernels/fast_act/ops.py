@@ -9,6 +9,8 @@ Pallas would be needlessly slow).
 
 from __future__ import annotations
 
+from typing import Optional, Tuple
+
 import jax
 import jax.numpy as jnp
 
@@ -18,9 +20,14 @@ from .kernel import fast_act_2d
 _ON_TPU = any(d.platform == "tpu" for d in jax.devices())
 
 
-def fast_act(x: jnp.ndarray, fn: str, use_pallas: bool = False) -> jnp.ndarray:
+def fast_act(x: jnp.ndarray, fn: str, use_pallas: bool = False,
+             block: Optional[Tuple[int, int]] = None) -> jnp.ndarray:
     """fn in {'exp','tanh','sigmoid'} (softmax handled at a higher level
-    because it needs the two-pass reduction)."""
+    because it needs the two-pass reduction).
+
+    ``block`` overrides the default (rows, cols) tile of the Pallas
+    kernel — the autotuner passes the measured winner here.
+    """
     if not use_pallas:
         return ref.FAST[fn](x)
     shape = x.shape
@@ -30,7 +37,8 @@ def fast_act(x: jnp.ndarray, fn: str, use_pallas: bool = False) -> jnp.ndarray:
         x2 = x.reshape(1, -1)
     else:
         x2 = x.reshape(-1, shape[-1])
-    y = fast_act_2d(x2.astype(jnp.float32), fn, interpret=not _ON_TPU)
+    y = fast_act_2d(x2.astype(jnp.float32), fn, interpret=not _ON_TPU,
+                    block=block)
     return y.reshape(shape)
 
 

@@ -122,8 +122,9 @@ def fused_matmul_p(
 ) -> jnp.ndarray:
     """Raw pallas_call: operands must already be tile-aligned.
 
-    x: (M, K) f32;  w: (K, N) or (N, K) per w_layout;
-    bias/scale/offset: (1, N) or None.  Returns (M, N) f32.
+    x: (M, K) f32 or bf16;  w: (K, N) or (N, K) per w_layout, same
+    dtype as x; bias/scale/offset: (1, N) or None.  Accumulation is
+    always f32 (``preferred_element_type``); returns (M, N) f32.
     """
     m, k = x.shape
     n = w.shape[1] if w_layout == "io" else w.shape[0]

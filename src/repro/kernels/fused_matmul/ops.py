@@ -9,7 +9,7 @@ by test (tests/test_kernels.py sweeps shapes × epilogues).
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -44,25 +44,37 @@ def fused_matmul(
     fast: bool = False,
     w_layout: str = "io",
     use_pallas: bool = False,
+    block: Optional[Tuple[int, int, int]] = None,
     attrs: Optional[dict] = None,
 ) -> jnp.ndarray:
     """y = epilogue(x @ W (+ bias)) with W in 'io' (K,N) or 'oi' (N,K).
 
     x may be any rank; the contraction is over the last axis.
+
+    ``block`` overrides the heuristic ``pick_block`` geometry — the
+    autotuner passes the measured winner here so the kernel tiles
+    exactly the way the micro-benchmark did.
     """
     shape = x.shape
     k = shape[-1]
-    x2 = x.reshape(-1, k).astype(jnp.float32)
+    # bf16 operands stay bf16 on the Pallas path (the MXU multiplies
+    # narrow inputs exactly into the f32 accumulator, so numerics match
+    # an upcast) — this is what makes the dtype-parametrized VMEM model
+    # in kernels/tiles.py true: a bf16 tile really is half the bytes.
+    # Everything else computes in f32, as before.
+    compute = jnp.bfloat16 if x.dtype == jnp.bfloat16 else jnp.float32
+    x2 = x.reshape(-1, k).astype(compute)
     n = w.shape[1] if w_layout == "io" else w.shape[0]
     if not use_pallas:
         y = ref.fused_matmul_ref(
-            x2, w, bias, scale, offset, fn=fn, fast=fast,
+            x2.astype(jnp.float32), w, bias, scale, offset, fn=fn, fast=fast,
             w_layout=w_layout, attrs=attrs,
         )
         return y.reshape(shape[:-1] + (n,))
 
     m = x2.shape[0]
-    bm, bk, bn = _pick_block(m, k, n)
+    itemsize = jnp.dtype(compute).itemsize
+    bm, bk, bn = block if block is not None else _pick_block(m, k, n, itemsize)
     xp = _pad_to(x2, bm, bk)
     wp = _pad_to(w, bk if w_layout == "io" else bn, bn if w_layout == "io" else bk)
     pn = wp.shape[1] if w_layout == "io" else wp.shape[0]
@@ -74,7 +86,7 @@ def fused_matmul(
 
     y = fused_matmul_p(
         xp,
-        wp.astype(jnp.float32),
+        wp.astype(compute),
         pad_vec(bias),
         pad_vec(scale),
         pad_vec(offset),

@@ -1,17 +1,27 @@
 """TPU tile geometry shared by the kernels and the kernel selector.
 
 One source of truth for the hardware granules the Pallas kernels tile
-against, so the compile-time selector (``repro.core.selection``) reasons
-about exactly the blocks the kernels will use.
+against, so the compile-time selector (``repro.core.selection``) and the
+profile-guided autotuner (``repro.autotune``) reason about exactly the
+blocks the kernels will use.
+
+Granules are dtype-dependent on TPU: the lane (minor) dim is always 128
+wide, but the sublane granule is ``32 / itemsize`` rows (f32 → 8,
+bf16 → 16, int8 → 32) because the register file packs narrower elements
+deeper.  The VMEM working-set math is parametrized the same way — a
+bf16 operand tile holds twice the elements of an f32 tile in the same
+bytes, so the K-dim block cap scales up instead of leaving half the
+budget idle.
 """
 
 from __future__ import annotations
 
-from typing import Tuple
+from typing import List, Tuple
 
-#: MXU/VPU lane width (minor-most dim granule for f32).
+#: MXU/VPU lane width (minor-most dim granule, all dtypes).
 LANE = 128
-#: Sublane granule for f32 (second-minor dim).
+#: Sublane granule for f32 (second-minor dim).  Dtype-aware callers use
+#: :func:`sublane_for` instead.
 SUBLANE = 8
 #: Per-core VMEM the block working set must fit well under (~16 MiB on
 #: current TPUs; the budget is the full size — callers compare their
@@ -25,10 +35,60 @@ def ceil_to(n: int, align: int) -> int:
     return -(-n // align) * align
 
 
-def pick_block(m: int, k: int, n: int) -> Tuple[int, int, int]:
+def sublane_for(itemsize: int = 4) -> int:
+    """Sublane granule for a dtype of ``itemsize`` bytes: 32/itemsize
+    rows (f32 → 8, bf16 → 16, int8 → 32), never below the f32 granule."""
+    return max(SUBLANE, 32 // max(1, itemsize))
+
+
+def block_vmem_bytes(bm: int, bk: int, bn: int, itemsize: int = 4) -> int:
+    """Resident bytes of one fused-matmul block: x(bm,bk) + w(bk,bn)
+    tiles in the operand dtype, plus the f32 accumulator and output
+    tiles (the kernel always accumulates in f32)."""
+    return itemsize * (bm * bk + bk * bn) + 4 * 2 * (bm * bn)
+
+
+def pick_block(m: int, k: int, n: int, itemsize: int = 4
+               ) -> Tuple[int, int, int]:
     """VMEM-aware block choice for the fused matmul: x(bm,bk) + w(bk,bn)
-    + acc/out(bm,bn) in f32 must fit well under VMEM; keep MXU-aligned."""
-    bm = min(256, ceil_to(m, SUBLANE))
+    + acc/out(bm,bn) must fit well under VMEM; keep MXU-aligned.
+
+    The K cap scales with the operand dtype — 512 for f32, 1024 for
+    bf16 — so narrow dtypes stream twice the reduction depth through
+    the same VMEM bytes instead of leaving the budget idle.
+    """
+    sub = sublane_for(itemsize)
+    bm = min(256, ceil_to(m, sub))
     bn = min(256, ceil_to(n, LANE))
-    bk = min(512, ceil_to(k, LANE))
+    bk = min(512 * 4 // max(1, itemsize), ceil_to(k, LANE))
     return bm, bk, bn
+
+
+#: Candidate caps the autotuner sweeps around :func:`pick_block`.  Small
+#: on purpose: the grid is multiplied by every (shape, batch) tactic key
+#: and each candidate costs a compile + a micro-benchmark.
+_BM_CANDIDATES = (64, 128, 256)
+_BK_CANDIDATES = (256, 512, 1024)
+_BN_CANDIDATES = (128, 256)
+
+
+def enumerate_blocks(m: int, k: int, n: int, itemsize: int = 4,
+                     max_candidates: int = 8) -> List[Tuple[int, int, int]]:
+    """Block-geometry candidates for the autotuner: the heuristic's
+    :func:`pick_block` choice first (so the prior is always measured),
+    then a small cap grid around it, clipped to the padded problem
+    dims, deduplicated, and filtered to blocks whose working set fits
+    VMEM."""
+    sub = sublane_for(itemsize)
+    m_cap, k_cap, n_cap = ceil_to(m, sub), ceil_to(k, LANE), ceil_to(n, LANE)
+    blocks = [pick_block(m, k, n, itemsize)]
+    for bm in _BM_CANDIDATES:
+        for bk in _BK_CANDIDATES:
+            for bn in _BN_CANDIDATES:
+                b = (min(bm, m_cap), min(bk, k_cap), min(bn, n_cap))
+                if b in blocks:
+                    continue
+                if block_vmem_bytes(*b, itemsize=itemsize) > VMEM_BUDGET_BYTES:
+                    continue
+                blocks.append(b)
+    return blocks[:max_candidates]

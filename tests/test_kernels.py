@@ -56,6 +56,23 @@ def test_fused_matmul_higher_rank(rng):
     np.testing.assert_allclose(want, np.asarray(got), rtol=2e-5, atol=2e-5)
 
 
+def test_fused_matmul_bf16_operands_match_upcast(rng):
+    """bf16 operands stay bf16 in the kernel (half the VMEM bytes, as
+    tiles.block_vmem_bytes models) and match the f32-upcast reference
+    exactly — bf16 products are exact in the f32 accumulator."""
+    import jax.numpy as jnp
+
+    x = jnp.asarray(rng.standard_normal((16, 64)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((64, 32)) * 0.1, jnp.bfloat16)
+    b = rng.standard_normal(32).astype(np.float32)
+    got = fused_matmul(x, w, b, fn="relu", use_pallas=True)
+    want = fm_ref.fused_matmul_ref(
+        np.asarray(x, np.float32), np.asarray(w, np.float32), b, None, None,
+        fn="relu", fast=False, w_layout="io", attrs={})
+    assert got.dtype == jnp.float32
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
 # ---------------------------------------------------------------------------
 # fast activations (paper §3.4)
 # ---------------------------------------------------------------------------
