@@ -1,0 +1,135 @@
+"""Mixed-length serving benchmark: fixed-shape vs shape-polymorphic.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench --arch qwen2.5-14b \
+        --smoke --requests 16 --slots 4 --max-len 64 --out SERVE_BENCH.json
+
+Drives the continuous-batching scheduler twice over the same synthetic
+mixed-length request stream — once fixed-shape (``buckets=None``, the
+pre-bucketing scheduler) and once bucketed — and emits one JSON artifact
+with both summaries.  The bucketed run is split into a *warm-up wave*
+(background compiles land here) and a *steady-state wave* after
+``wait_warm()``; the bench asserts the steady wave serves with **zero
+request-path compile stalls** (the engine-cache contract) and that its
+greedy tokens are identical to the fixed-shape scheduler's, request by
+request.  Exit code 1 on either violation, so CI can gate on it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+
+def synth_requests(rng, n, vocab, max_len, max_new, uid0=0):
+    """Mixed-length stream: prompt lengths spread over [3, max_len/2)."""
+    from repro.serve import Request
+    hi = max(5, max_len // 2)
+    return [Request(uid=uid0 + i,
+                    prompt=rng.integers(0, vocab,
+                                        int(rng.integers(3, hi))).astype(
+                                            np.int32),
+                    max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def drain(sched, reqs):
+    t0 = time.perf_counter()
+    for r in reqs:
+        sched.submit(r)
+    done = sched.run()
+    return time.perf_counter() - t0, {c.uid: c.tokens for c in done}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-14b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="total requests; half warm-up, half steady-state")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--out", default=None, help="JSON artifact path")
+    ap.add_argument("--allow-stalls", action="store_true",
+                    help="report steady-state stalls instead of failing")
+    args = ap.parse_args(argv)
+
+    import repro
+    from repro.configs import get_config
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
+    n_warm = args.requests // 2
+    n_steady = args.requests - n_warm
+
+    def requests(uid0=0):
+        rng = np.random.default_rng(0)
+        reqs = synth_requests(rng, args.requests, cfg.vocab, args.max_len,
+                              args.max_new, uid0=uid0)
+        return reqs[:n_warm], reqs[n_warm:]
+
+    # -- fixed-shape reference ----------------------------------------
+    sched = repro.serve(exe, repro.SchedulerOptions(
+        slots=args.slots, max_len=args.max_len))
+    warm, steady = requests()
+    t_fixed, fixed_tokens = drain(sched, warm + steady)
+    fixed_summary = sched.summary()
+
+    # -- bucketed: warm-up wave, then the steady-state wave -----------
+    policy = repro.BucketPolicy.default(max_batch=args.slots,
+                                       max_len=args.max_len)
+    sched = repro.serve(exe, repro.SchedulerOptions(
+        slots=args.slots, max_len=args.max_len, buckets=policy))
+    warm, steady = requests()
+    t_warm, warm_tokens = drain(sched, warm)
+    warmed = sched.wait_warm()
+    stalls0 = sched.summary()["runtime"]["compile_stalls"]
+    t_steady, steady_tokens = drain(sched, steady)
+    bucketed_summary = sched.summary()
+    sched.shutdown()
+    steady_stalls = bucketed_summary["runtime"]["compile_stalls"] - stalls0
+
+    mismatched = [uid for uid, toks in (warm_tokens | steady_tokens).items()
+                  if fixed_tokens[uid] != toks]
+    report = {
+        "arch": args.arch, "smoke": args.smoke, "slots": args.slots,
+        "max_len": args.max_len, "requests": args.requests,
+        "policy": policy.to_dict(),
+        "fixed": {"wall_s": round(t_fixed, 3), "summary": fixed_summary},
+        "bucketed": {"warm_wall_s": round(t_warm, 3),
+                     "steady_wall_s": round(t_steady, 3),
+                     "warmed": warmed,
+                     "summary": bucketed_summary},
+        "steady_state_stalls": steady_stalls,
+        "tokens_match": not mismatched,
+        "mismatched_uids": mismatched,
+    }
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(report, f, indent=2)
+    rt = bucketed_summary["runtime"]
+    print(f"[serve_bench] fixed {t_fixed:.2f}s | bucketed warm "
+          f"{t_warm:.2f}s steady {t_steady:.2f}s | "
+          f"{rt['bucket_hits']} hits / {rt['bucket_misses']} misses / "
+          f"{rt['background_compiles']} bg compiles | "
+          f"pad waste {rt['pad_waste_frac']:.1%} | "
+          f"steady-state stalls {steady_stalls}", flush=True)
+
+    ok = True
+    if mismatched:
+        print(f"[serve_bench] FAIL: bucketed tokens diverge from "
+              f"fixed-shape for uids {mismatched}", file=sys.stderr)
+        ok = False
+    if steady_stalls and not args.allow_stalls:
+        print(f"[serve_bench] FAIL: {steady_stalls} compile stall(s) on "
+              f"the request path in steady state", file=sys.stderr)
+        ok = False
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

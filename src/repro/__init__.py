@@ -16,6 +16,8 @@ before jax initializes.
 """
 
 _API_NAMES = (
+    "Bucket",
+    "BucketPolicy",
     "CompileOptions",
     "Executable",
     "SchedulerOptions",
@@ -24,6 +26,7 @@ _API_NAMES = (
     "available_targets",
     "compile",
     "deserialize",
+    "prune",
     "register_frontend",
     "register_target",
     "serve",

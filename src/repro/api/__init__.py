@@ -18,8 +18,9 @@ from .. import frontends
 from ..core.graph import Graph, Signature
 from ..frontends import available_frontends, get_frontend, register_frontend
 from ..frontends.trace import trace
+from ..runtime.buckets import Bucket, BucketPolicy
 from ..serve.options import SchedulerOptions
-from .cache import ExecutableCache, resolve_cache_dir
+from .cache import ExecutableCache, prune, resolve_cache_dir
 from .executable import Executable, deserialize
 from .options import CompileOptions
 from .serve import serve
@@ -89,10 +90,22 @@ def compile(model, options: Optional[CompileOptions] = None,
     if factory_kw:
         raise TypeError(f"unexpected args for graph targets: "
                         f"{sorted(factory_kw)}")
-    return get_target(options.target)(model, options)
+    exe = get_target(options.target)(model, options)
+    if options.buckets is not None:
+        # Shape-polymorphic dispatch: one warm program per batch bucket,
+        # cold buckets compiled in the background (repro.runtime).
+        if not isinstance(exe, JitExecutable):
+            raise TypeError(
+                f"buckets= requires a per-batch-compiling target "
+                f"('jit'/'pallas'), not {options.target!r}")
+        from ..runtime.bucketed import BucketedExecutable
+        exe = BucketedExecutable(exe, options.buckets)
+    return exe
 
 
 __all__ = [
+    "Bucket",
+    "BucketPolicy",
     "CompileOptions",
     "Executable",
     "ExecutableCache",
@@ -107,6 +120,7 @@ __all__ = [
     "get_frontend",
     "get_target",
     "register_frontend",
+    "prune",
     "register_target",
     "resolve_cache_dir",
     "SchedulerOptions",

@@ -27,6 +27,12 @@ import jax
 
 _FORMAT_VERSION = 1
 
+#: Env var capping the on-disk executable cache size in bytes; when set,
+#: every ``store`` triggers an LRU sweep back under the cap.  Bucketed
+#: executables multiply entries (one per batch bucket), so an unbounded
+#: cache directory now grows much faster than it did pre-bucketing.
+MAX_BYTES_ENV = "REPRO_CACHE_MAX_BYTES"
+
 
 def cache_key(*parts: str) -> str:
     """Digest of the given parts plus everything environmental that
@@ -68,6 +74,12 @@ class ExecutableCache:
                 payload = pickle.load(f)
             exe = se.deserialize_and_load(*payload)
             self.hits += 1
+            try:
+                # LRU recency: a hit refreshes the entry's mtime so the
+                # size-capped sweep evicts cold entries, not hot ones.
+                os.utime(path)
+            except OSError:
+                pass
             return exe
         except Exception:
             # Corrupt/stale entry: drop it and recompile.
@@ -91,16 +103,72 @@ class ExecutableCache:
             with os.fdopen(fd, "wb") as f:
                 f.write(blob)
             os.replace(tmp, self._path(key))
-            return True
         except OSError:
             try:
                 os.remove(tmp)
             except OSError:
                 pass
             return False
+        cap = os.environ.get(MAX_BYTES_ENV)
+        if cap:
+            try:
+                prune(int(cap), self.root)
+            except (OSError, ValueError):
+                pass                       # the sweep is best-effort
+        return True
 
     def stats(self) -> dict:
         return {"dir": self.root, "hits": self.hits, "misses": self.misses}
+
+
+def prune(max_bytes: int, cache_dir: Optional[str] = None) -> dict:
+    """Size-capped LRU sweep of the persistent executable cache.
+
+    Deletes least-recently-used ``.xla`` entries (mtime order — ``load``
+    refreshes it on every hit) until the directory's entry bytes fit in
+    ``max_bytes``, and clears out orphaned ``.tmp`` files from
+    interrupted writes.  Corruption-safe by construction: entries are
+    only ever whole files (writes go through an atomic rename), removal
+    is whole-file, and a concurrently-vanishing file is skipped, so a
+    reader racing the sweep sees either a valid entry or a clean miss —
+    never a truncated one.
+
+    Returns ``{"dir", "before_bytes", "after_bytes", "removed"}``.
+    """
+    if max_bytes < 0:
+        raise ValueError(f"max_bytes must be >= 0, got {max_bytes}")
+    root = resolve_cache_dir(cache_dir)
+    report = {"dir": root, "before_bytes": 0, "after_bytes": 0, "removed": 0}
+    if not root or not os.path.isdir(root):
+        return report
+    entries = []
+    for name in os.listdir(root):
+        path = os.path.join(root, name)
+        try:
+            if name.endswith(".tmp"):      # orphaned partial write
+                os.remove(path)
+                report["removed"] += 1
+                continue
+            if not name.endswith(".xla") or not os.path.isfile(path):
+                continue
+            st = os.stat(path)
+        except OSError:
+            continue                       # vanished mid-sweep: skip
+        entries.append((st.st_mtime, st.st_size, path))
+    total = sum(size for _, size, _ in entries)
+    report["before_bytes"] = total
+    entries.sort()                         # oldest (coldest) first
+    for _, size, path in entries:
+        if total <= max_bytes:
+            break
+        try:
+            os.remove(path)
+        except OSError:
+            continue
+        total -= size
+        report["removed"] += 1
+    report["after_bytes"] = total
+    return report
 
 
 def open_cache(explicit_dir: Optional[str]) -> Optional[ExecutableCache]:

@@ -92,10 +92,17 @@ def deserialize(data: bytes) -> Executable:
     # writes files to an arbitrary path.
     options = options.replace(cache_dir=None, dump_ir=None)
     kind = meta.get("kind")
-    if kind == "graph":
+    if kind in ("graph", "bucketed"):
         from ..frontends.container import load_model
         from . import compile as api_compile
         graph = load_model(io.BytesIO(body))
+        if kind == "bucketed":
+            # Manifest container: re-wrap with the serialized policy.
+            # The per-bucket artifacts live in the persistent executable
+            # cache; buckets present locally pre-warm at construction.
+            from ..runtime.buckets import BucketPolicy
+            options = options.replace(
+                buckets=BucketPolicy.from_dict(meta["policy"]))
         return api_compile(graph, options)
     if kind == "engine":
         from .engine_adapter import deserialize_engine

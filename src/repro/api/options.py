@@ -12,6 +12,8 @@ import dataclasses
 import json
 from typing import Optional, Tuple
 
+from ..runtime.buckets import BucketPolicy
+
 PRECISIONS = ("exact", "fast")
 AUTOTUNE_MODES = ("off", "cached", "full")
 
@@ -32,6 +34,14 @@ class CompileOptions:
     batch_buckets: optional ascending batch sizes to specialize for; a
                    call with batch B runs the smallest bucket ≥ B (input
                    padded, output sliced).  Empty = specialize exactly.
+                   Compiles lazily and synchronously — the legacy
+                   spelling; prefer ``buckets=`` for the runtime engine
+                   cache (async warm-up, nearest-warm fallback).
+    buckets:       a :class:`repro.runtime.BucketPolicy`; the compile
+                   returns a :class:`~repro.runtime.BucketedExecutable`
+                   (one warm program per batch bucket, background
+                   compilation of cold buckets, pre-warming from the
+                   persistent cache).  ``None`` = exact specialization.
     donate_inputs: donate input buffers to the compiled program
                    (in-place memory reuse; callers must not reuse the
                    arrays they pass in).
@@ -62,6 +72,7 @@ class CompileOptions:
     embed_weights: bool = True
     passes: Optional[Tuple[str, ...]] = None
     batch_buckets: Tuple[int, ...] = ()
+    buckets: Optional[BucketPolicy] = None
     donate_inputs: bool = False
     cache_dir: Optional[str] = None
     dump_ir: Optional[str] = None
@@ -90,6 +101,18 @@ class CompileOptions:
         if any(b <= 0 for b in buckets):
             raise ValueError(f"batch_buckets must be positive: {buckets}")
         object.__setattr__(self, "batch_buckets", buckets)
+        if isinstance(self.buckets, dict):      # from_dict round-trip
+            object.__setattr__(self, "buckets",
+                               BucketPolicy.from_dict(self.buckets))
+        if self.buckets is not None and not isinstance(self.buckets,
+                                                       BucketPolicy):
+            raise ValueError(
+                f"buckets must be a repro.runtime.BucketPolicy or None, "
+                f"got {type(self.buckets).__name__}")
+        if self.buckets is not None and self.batch_buckets:
+            raise ValueError(
+                "batch_buckets (legacy, lazy) and buckets (runtime "
+                "engine cache) are mutually exclusive")
 
     # ------------------------------------------------------------------
     def replace(self, **kw) -> "CompileOptions":
@@ -110,10 +133,12 @@ class CompileOptions:
         """Stable string of every field that affects generated code.
 
         ``cache_dir`` is excluded (where the cache lives must not change
-        what is cached), so is ``batch_buckets`` (the per-batch program
-        is identical however the caller buckets; the batch size itself
-        is a separate key component), and so is ``dump_ir`` (a debugging
-        side channel, not a codegen choice).  The ``autotune`` fields
+        what is cached), so are ``batch_buckets`` and ``buckets`` (the
+        per-batch program is identical however the caller buckets; the
+        batch size itself is a separate key component — which is also
+        why bucketed executables share disk entries with exact compiles
+        of the same batch), and so is ``dump_ir`` (a debugging side
+        channel, not a codegen choice).  The ``autotune`` fields
         are excluded too: what actually changes the generated code is
         the *resolved kernel selection*, which the executable cache key
         mixes in separately — so an autotuned compile whose measurements
@@ -123,6 +148,7 @@ class CompileOptions:
         d = self.to_dict()
         d.pop("cache_dir")
         d.pop("batch_buckets")
+        d.pop("buckets")
         d.pop("dump_ir")
         d.pop("autotune")
         d.pop("autotune_budget_ms")

@@ -28,6 +28,7 @@ _SERVE_HINT = (
 def serve(executable, options: Optional[SchedulerOptions] = None, *,
           sampler: Optional[Callable] = None,
           clock: Optional[Callable[[], float]] = None,
+          engine_worker: Optional[str] = None,
           **kw) -> Scheduler:
     """Build a continuous-batching :class:`Scheduler` over ``executable``.
 
@@ -50,4 +51,6 @@ def serve(executable, options: Optional[SchedulerOptions] = None, *,
     extra = {}
     if clock is not None:
         extra["clock"] = clock
+    if engine_worker is not None:
+        extra["engine_worker"] = engine_worker
     return Scheduler(model, params, options, sampler=sampler, **extra)

@@ -22,6 +22,7 @@ import functools
 import hashlib
 import io
 import json
+import threading
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -171,6 +172,10 @@ class JitExecutable(GraphExecutable):
         self.graph, self.report = run_pipeline(
             graph, options.passes, dump_ir=options.dump_ir)
         self._pass_time = time.perf_counter() - t0
+        # ensure_compiled may be entered from a BucketedExecutable's
+        # background-compile worker concurrently with the request path;
+        # one lock keeps the memo/compile/stat updates coherent.
+        self._compile_lock = threading.RLock()
         self._fns: Dict[int, Callable] = {}
         self._selections: Dict[int, Dict[str, KernelChoice]] = {}
         self._autotune_reports: Dict[int, dict] = {}
@@ -217,9 +222,57 @@ class JitExecutable(GraphExecutable):
                          f"sel={self._selection_token(selection or {})}")
 
     # -- compilation ---------------------------------------------------
+    def _resolve_selection(self, batch_size: int, *,
+                           probe: bool = False):
+        """Kernel selection for one batch specialization: the static
+        heuristic prior, refined by the autotuner when enabled.  With
+        ``probe=True`` the autotune mode is downgraded ``"full"`` →
+        ``"cached"`` so probing a cache key never spends measurement
+        budget (used by :meth:`disk_key` / bucket pre-warming)."""
+        selection = select_kernels(
+            self.graph, batch_size=batch_size,
+            target=self.lowering_target,
+            precision=self.options.precision)
+        report = None
+        if selection and self.options.autotune != "off":
+            # Profile-guided refinement: measured tactics override the
+            # heuristic prior; any failure leaves the prior untouched.
+            from ..autotune import open_tactic_cache, tune_selection
+            mode = ("cached" if probe and self.options.autotune == "full"
+                    else self.options.autotune)
+            selection, report = tune_selection(
+                self.graph, selection,
+                batch_size=batch_size,
+                precision=self.options.precision,
+                mode=mode,
+                budget_ms=self.options.autotune_budget_ms,
+                cache=open_tactic_cache(self.options.cache_dir))
+        return selection, report
+
+    def disk_key(self, batch_size: int) -> str:
+        """The persistent-cache key this batch specialization resolves
+        to today (autotune measurements are never triggered: in
+        ``"full"`` mode the probe sees the cached tactics only)."""
+        selection, _ = self._resolve_selection(batch_size, probe=True)
+        return self._key(batch_size, selection)
+
+    def has_disk_entry(self, batch_size: int) -> bool:
+        """True if the persistent on-disk cache already holds the
+        executable for this batch specialization."""
+        if self._disk is None:
+            return False
+        import os
+        return os.path.exists(self._disk._path(self.disk_key(batch_size)))
+
     def ensure_compiled(self, batch_size: int = 1) -> Callable:
         """Compile (or fetch) the program specialized to ``batch_size``;
         returns a callable taking inputs positionally in graph order."""
+        if batch_size in self._fns:
+            return self._fns[batch_size]
+        with self._compile_lock:
+            return self._compile_batch(batch_size)
+
+    def _compile_batch(self, batch_size: int) -> Callable:
         if batch_size in self._fns:
             return self._fns[batch_size]
         t0 = time.perf_counter()
@@ -228,21 +281,8 @@ class JitExecutable(GraphExecutable):
         # Static kernel selection for this specialization: decided from
         # shapes before tracing, honored by the target lowering rules,
         # surfaced in cost_summary().
-        selection = select_kernels(
-            self.graph, batch_size=batch_size,
-            target=self.lowering_target,
-            precision=self.options.precision)
-        if selection and self.options.autotune != "off":
-            # Profile-guided refinement: measured tactics override the
-            # heuristic prior; any failure leaves the prior untouched.
-            from ..autotune import open_tactic_cache, tune_selection
-            selection, report = tune_selection(
-                self.graph, selection,
-                batch_size=batch_size,
-                precision=self.options.precision,
-                mode=self.options.autotune,
-                budget_ms=self.options.autotune_budget_ms,
-                cache=open_tactic_cache(self.options.cache_dir))
+        selection, report = self._resolve_selection(batch_size)
+        if report is not None:
             self._autotune_reports[batch_size] = report
         if selection:   # targets without kernel decisions stay silent
             self._selections[batch_size] = selection

@@ -30,6 +30,12 @@ def main(argv=None) -> int:
     ap.add_argument("--admission", default="fcfs",
                     choices=("fcfs", "shortest"))
     ap.add_argument("--no-fold", action="store_true")
+    ap.add_argument("--buckets", action="store_true", default=None,
+                    help="shape-polymorphic serving: decode at the best "
+                         "warm batch bucket, prefill per length bucket, "
+                         "background compile of cold buckets")
+    ap.add_argument("--no-buckets", dest="buckets", action="store_false",
+                    help="fixed-shape serving (the default)")
     ap.add_argument("--json", action="store_true",
                     help="print the metrics summary as JSON")
     args = ap.parse_args(argv)
@@ -40,11 +46,16 @@ def main(argv=None) -> int:
 
     cfg = get_config(args.arch, smoke=args.smoke)
 
+    policy = None
+    if args.buckets:
+        policy = repro.BucketPolicy.default(max_batch=args.slots,
+                                            max_len=args.max_len)
+
     t0 = time.perf_counter()
     exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
     sched = repro.serve(exe, repro.SchedulerOptions(
         slots=args.slots, max_len=args.max_len, admission=args.admission,
-        fold=not args.no_fold))
+        fold=not args.no_fold, buckets=policy))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.integers(4, 17))
@@ -59,6 +70,7 @@ def main(argv=None) -> int:
 
     done = sched.run()
     summary = sched.summary()
+    sched.shutdown()
     if args.json:
         print(json.dumps(summary, indent=2), flush=True)
     else:
@@ -68,6 +80,13 @@ def main(argv=None) -> int:
               f"mean TTFT {(summary['mean_ttft'] or 0) * 1e3:.0f}ms, "
               f"occupancy {(summary['mean_batch_occupancy'] or 0):.2f}"
               f"/{args.slots})", flush=True)
+        if "runtime" in summary:
+            rt = summary["runtime"]
+            print(f"[serve] buckets: {rt['bucket_hits']} hits, "
+                  f"{rt['bucket_misses']} misses, "
+                  f"{rt['background_compiles']} background compiles, "
+                  f"{rt['compile_stalls']} stalls, "
+                  f"pad waste {rt['pad_waste_frac']:.1%}", flush=True)
         for c in sorted(done, key=lambda c: c.uid)[:4]:
             print(f"  uid={c.uid} reason={c.finish_reason} "
                   f"tokens={c.tokens[:8]}...", flush=True)

@@ -1,0 +1,43 @@
+"""repro.runtime — shape-polymorphic serving over compiled executables.
+
+The missing layer between ``repro.compile`` (one program per exact
+shape) and ``repro.serve`` (live traffic whose shapes move every step):
+
+* :class:`BucketPolicy` / :class:`Bucket` — deterministic shape→bucket
+  rounding (powers-of-two batch buckets × configurable length buckets)
+  with per-dispatch pad-waste accounting;
+* :class:`EngineCache` — an in-process bucket → warm-executable cache:
+  cold buckets compile on a background worker and atomically swap in
+  while requests are served on the nearest warm larger bucket — never a
+  compile stall on the request path;
+* :class:`BucketedExecutable` — what ``repro.compile(graph,
+  CompileOptions(buckets=policy))`` returns: one signature, one source
+  graph, per-bucket specialized programs dispatched by input shape,
+  pre-warmed from the persistent on-disk executable cache.
+
+The serving scheduler (:mod:`repro.serve`) builds on the same pieces:
+``SchedulerOptions(buckets=policy)`` buckets prefill by prompt length
+and sizes each decode step's rebatch to the best warm batch bucket.
+"""
+
+from .buckets import Bucket, BucketPolicy, powers_of_two
+from .engine_cache import EngineCache, WORKER_MODES
+
+
+def __getattr__(name):
+    # Lazy: bucketed.py pulls in jax and repro.api; CompileOptions
+    # imports BucketPolicy from here, so the eager surface must stay
+    # import-cycle-free (and jax-free, like `import repro` itself).
+    if name == "BucketedExecutable":
+        from .bucketed import BucketedExecutable
+        return BucketedExecutable
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "Bucket",
+    "BucketPolicy",
+    "BucketedExecutable",
+    "EngineCache",
+    "WORKER_MODES",
+    "powers_of_two",
+]

@@ -1,0 +1,149 @@
+"""BucketedExecutable — shape-polymorphic dispatch over one compiled model.
+
+``repro.compile(graph, CompileOptions(target="jit", buckets=policy))``
+returns one of these instead of a bare :class:`JitExecutable`: a single
+:class:`~repro.core.graph.Signature`, a single source graph, but one
+specialized program *per batch bucket*, dispatched by the input's batch
+dimension at call time.  A call whose batch is not a bucket pads up to
+the chosen bucket and slices the outputs back — numerically identical
+to calling the bucket's program on the padded input directly.
+
+Compilation never blocks a dispatch that a warm bucket can cover: cold
+buckets compile on the :class:`~repro.runtime.engine_cache.EngineCache`
+background worker while the call is served on the nearest warm larger
+bucket.  At construction the cache pre-warms from the persistent
+on-disk executable cache: every bucket whose key is already on disk is
+loaded immediately (an XLA deserialization, not a compile), so a second
+process starts with the first process's buckets warm.
+
+Serialization is a *manifest*: the source graph (the portable,
+backend-independent artifact) plus the per-bucket persistent-cache keys,
+so the machine-code level stays in the on-disk executable cache where
+it belongs and ``repro.deserialize`` re-wraps with the same policy.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..api.executable import Executable, pack
+from .buckets import Bucket, BucketPolicy
+from .engine_cache import EngineCache
+
+
+class BucketedExecutable(Executable):
+    """Dispatch-by-shape wrapper over a :class:`JitExecutable`."""
+
+    def __init__(self, inner, policy: BucketPolicy, *,
+                 worker: str = "thread", prewarm: bool = True) -> None:
+        if policy.len_buckets:
+            raise ValueError(
+                "graph executables have fixed per-example shapes; "
+                "BucketPolicy.len_buckets applies to serving "
+                "(SchedulerOptions), not CompileOptions")
+        self.inner = inner
+        self.policy = policy
+        self.options = inner.options
+        self.signature = inner.signature
+        self.source = inner.source
+        self._cache = EngineCache(
+            policy, build=lambda b: inner.ensure_compiled(b.batch),
+            worker=worker)
+        if prewarm:
+            self.prewarm_from_disk()
+
+    # ------------------------------------------------------------------
+    @property
+    def compile_time(self):
+        return self.inner.compile_time
+
+    @compile_time.setter
+    def compile_time(self, value):   # Executable base class assigns it
+        pass
+
+    def prewarm_from_disk(self) -> int:
+        """Load every bucket whose executable is already in the
+        persistent on-disk cache (PR 1).  Deserialization, not
+        compilation — cheap enough to do synchronously at construction.
+        Returns the number of buckets warmed."""
+        n = 0
+        for bucket in self.policy.enumerate_buckets():
+            if self.inner.has_disk_entry(bucket.batch):
+                self._cache.warm_up([bucket], block=True)
+                n += 1
+        return n
+
+    def warm_up(self, *, block: bool = False) -> None:
+        """Compile every bucket (background by default)."""
+        self._cache.warm_up(block=block)
+
+    def wait_warm(self, timeout: float = 120.0) -> bool:
+        return self._cache.wait_warm(timeout)
+
+    def ensure_compiled(self, batch_size: int = 1):
+        """Blocking compile of the bucket covering ``batch_size``;
+        returns the bucket's program (inputs must be padded to the
+        bucket batch by the caller — ``__call__`` does this)."""
+        bucket = self.policy.bucket_for(batch_size)
+        self._cache.warm_up([bucket], block=True)
+        return self._cache.peek(bucket)
+
+    # ------------------------------------------------------------------
+    def __call__(self, *pos, **inputs):
+        args = self.inner._gather_inputs(pos, inputs)
+        batch = args[0].shape[0]
+        fn, bucket, _ = self._cache.get(batch)
+        if bucket.batch != batch:
+            args = [
+                jnp.concatenate(
+                    [a, jnp.zeros((bucket.batch - batch,) + a.shape[1:],
+                                  a.dtype)])
+                for a in args
+            ]
+        out = fn(*args)
+        if bucket.batch != batch:
+            out = {k: v[:batch] for k, v in out.items()}
+        return {pub: out[opt] for pub, opt in
+                zip(self.inner.source.output_names,
+                    self.inner.graph.outputs)}
+
+    # ------------------------------------------------------------------
+    def cost_summary(self):
+        out = self.inner.cost_summary()
+        out["runtime"] = {"policy": self.policy.to_dict(),
+                          **self._cache.stats()}
+        return out
+
+    def cache_info(self) -> dict:
+        return self.inner.cache_info()
+
+    def runtime_stats(self) -> dict:
+        return self._cache.stats()
+
+    def serialize(self) -> bytes:
+        """Manifest container: the graph body plus per-bucket artifact
+        keys into the persistent executable cache."""
+        from ..frontends.container import save_model
+        import io
+        buf = io.BytesIO()
+        save_model(self.inner.source, buf)
+        artifacts = {
+            str(b): self.inner.disk_key(b.batch)
+            for b in self.policy.enumerate_buckets()
+        }
+        return pack("bucketed", self.options, buf.getvalue(),
+                    extra={"signature": self.signature.to_dict(),
+                           "policy": self.policy.to_dict(),
+                           "artifacts": artifacts})
+
+    def shutdown(self) -> None:
+        self._cache.shutdown()
+
+    def __repr__(self) -> str:
+        warm = ", ".join(str(b) for b in self._cache.warm_buckets())
+        return (f"BucketedExecutable(target={self.options.target!r}, "
+                f"buckets={json.dumps(self.policy.to_dict())}, "
+                f"warm=[{warm}])")

@@ -10,6 +10,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from ..runtime.buckets import BucketPolicy
+
 ADMISSION_POLICIES = ("fcfs", "shortest")
 
 
@@ -32,6 +34,15 @@ class SchedulerOptions:
     fold:         run ``fold_norms`` on the params at scheduler build
                   (compile-time weight rewriting, paper §3.5).
     seed:         PRNG seed for the default temperature sampler.
+    buckets:      a :class:`repro.runtime.BucketPolicy` enabling
+                  shape-polymorphic serving: each step decodes at the
+                  smallest warm batch bucket covering the active slots
+                  (cache rows sliced, outputs written back) and prefill
+                  runs one program per length bucket instead of one per
+                  prompt length; cold buckets compile on a background
+                  worker.  Buckets are clipped to ``slots``/``max_len``.
+                  ``None`` (default) = fixed-shape serving, bit-identical
+                  to the pre-bucketing scheduler.
     """
 
     slots: int = 4
@@ -40,6 +51,7 @@ class SchedulerOptions:
     max_queue: Optional[int] = None
     fold: bool = True
     seed: int = 0
+    buckets: Optional[BucketPolicy] = None
 
     def __post_init__(self) -> None:
         if self.slots <= 0:
@@ -52,6 +64,14 @@ class SchedulerOptions:
         if self.max_queue is not None and self.max_queue <= 0:
             raise ValueError(f"max_queue must be positive or None, "
                              f"got {self.max_queue}")
+        if isinstance(self.buckets, dict):      # to_dict round-trip
+            object.__setattr__(self, "buckets",
+                               BucketPolicy.from_dict(self.buckets))
+        if self.buckets is not None and not isinstance(self.buckets,
+                                                       BucketPolicy):
+            raise ValueError(
+                f"buckets must be a repro.runtime.BucketPolicy or None, "
+                f"got {type(self.buckets).__name__}")
 
     def replace(self, **kw) -> "SchedulerOptions":
         return dataclasses.replace(self, **kw)

@@ -90,7 +90,8 @@ class Scheduler:
 
     def __init__(self, model, params, options: SchedulerOptions, *,
                  sampler: Optional[Callable] = None,
-                 clock: Callable[[], float] = time.perf_counter) -> None:
+                 clock: Callable[[], float] = time.perf_counter,
+                 engine_worker: str = "thread") -> None:
         self.model = model
         self.cfg = model.cfg
         self.options = options
@@ -119,6 +120,115 @@ class Scheduler:
             lambda p, c, t: model.decode_step(p, c, t),
             donate_argnums=(1,))
         self._prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c))
+
+        # shape-polymorphic serving (repro.runtime): warm programs per
+        # bucket, background compiles.  None = fixed-shape (PR-5) path.
+        self._decode_engine = None
+        self._prefill_engine = None
+        if options.buckets is not None:
+            self._init_bucketing(engine_worker)
+
+    # -- bucketed engines ----------------------------------------------
+    def _cache_grows_with_max_len(self) -> bool:
+        """False for ring caches (all-sliding-window models), whose
+        capacity is the window, not ``max_len``.  Padded prefill would
+        roll real tokens out of a ring, so length bucketing is only
+        sound when the cache actually holds ``max_len`` positions."""
+        a = jax.eval_shape(
+            lambda: self.model.init_cache(1, self.options.max_len))
+        b = jax.eval_shape(
+            lambda: self.model.init_cache(1, self.options.max_len + 1))
+        return any(x.shape != y.shape for x, y in
+                   zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+    def _init_bucketing(self, worker: str) -> None:
+        from ..runtime.buckets import Bucket, BucketPolicy
+        from ..runtime.engine_cache import EngineCache
+        opts = self.options
+        policy = opts.buckets.clip(max_batch=opts.slots,
+                                   max_len=opts.max_len)
+        cache_spec = jax.eval_shape(
+            lambda: self.model.init_cache(1, opts.max_len))
+        params_spec = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.params)
+        len_ok = (policy.len_buckets
+                  and isinstance(cache_spec, dict) and "pos" in cache_spec
+                  and self._cache_grows_with_max_len())
+
+        def build_decode(bucket):
+            b = bucket.batch
+            c_spec = jax.eval_shape(
+                lambda: self.model.init_cache(b, opts.max_len))
+            t_spec = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            # only the full-slots program may donate: the sliced path
+            # still needs the sub-cache for the write-back
+            donate = (1,) if b == opts.slots else ()
+            fn = jax.jit(lambda p, c, t: self.model.decode_step(p, c, t),
+                         donate_argnums=donate)
+            return fn.lower(params_spec, c_spec, t_spec).compile()
+
+        self._decode_engine = EngineCache(
+            BucketPolicy(batch_buckets=policy.batch_buckets),
+            build_decode, worker=worker, clock=self.clock)
+        # the full-slots program covers every batch, so compiling it
+        # synchronously here (load time, not latency) guarantees the
+        # decode path never stalls; smaller buckets fill in behind it
+        self._decode_engine.warm_up([Bucket(opts.slots)], block=True)
+        self._decode_engine.warm_up(block=False)
+
+        if not len_ok:
+            return
+
+        def build_prefill(bucket):
+            from ..configs.base import extra_input_specs
+            b_spec = {"tokens": jax.ShapeDtypeStruct((1, bucket.length),
+                                                     jnp.int32)}
+            for name, (shape, dt) in extra_input_specs(self.cfg).items():
+                b_spec[name] = jax.ShapeDtypeStruct(shape, dt)
+            l_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            fn = jax.jit(self._prefill_fixup)
+            return fn.lower(params_spec, b_spec, cache_spec,
+                            l_spec).compile()
+
+        self._prefill_engine = EngineCache(
+            BucketPolicy(batch_buckets=(1,),
+                         len_buckets=policy.len_buckets),
+            build_prefill, worker=worker, clock=self.clock)
+        # largest length bucket first: it covers every admissible
+        # prompt, so fallback coverage arrives as early as possible
+        self._prefill_engine.warm_up(
+            tuple(reversed(self._prefill_engine.policy.enumerate_buckets())))
+
+    def _prefill_fixup(self, p, batch, cache, length):
+        """Prefill padded to the bucket, then recover the exact-length
+        result: the pad positions' K/V entries are causally downstream
+        of the real tokens, so after rewinding ``pos`` to the last real
+        token and re-decoding it, the logits and every cache position
+        the model can still attend to are bit-identical to an
+        exact-length prefill.  ``length`` is traced, so ONE compiled
+        program serves every prompt length up to the bucket."""
+        _, cache = self.model.prefill(p, batch, cache)
+        cache = dict(cache)
+        cache["pos"] = jnp.full_like(cache["pos"], length - 1)
+        last = jax.lax.dynamic_slice_in_dim(batch["tokens"], length - 1, 1,
+                                            axis=1)
+        return self.model.decode_step(p, cache, last)
+
+    def wait_warm(self, timeout: float = 120.0) -> bool:
+        """Block until every scheduled background compile has landed
+        (True) or the timeout expires.  No-op without bucketing."""
+        ok = True
+        for eng in (self._decode_engine, self._prefill_engine):
+            if eng is not None:
+                ok = eng.wait_warm(timeout) and ok
+        return ok
+
+    def shutdown(self) -> None:
+        """Stop the background compile workers (daemon threads — safe
+        to skip, but tests join them for determinism)."""
+        for eng in (self._decode_engine, self._prefill_engine):
+            if eng is not None:
+                eng.shutdown()
 
     # -- queue ---------------------------------------------------------
     def submit(self, req: Request) -> RequestMetrics:
@@ -227,8 +337,18 @@ class Scheduler:
 
             prompt = np.asarray(req.prompt, np.int32)[None, :]
             one = self.model.init_cache(1, self.options.max_len)
-            logits, one = self._prefill(
-                self.params, self._prefill_batch(prompt, req.inputs), one)
+            if self._prefill_engine is not None:
+                plen = prompt.shape[1]
+                entry, bucket, _ = self._prefill_engine.get(1, plen)
+                padded = np.zeros((1, bucket.length), np.int32)
+                padded[:, :plen] = prompt
+                logits, one = entry(
+                    self.params, self._prefill_batch(padded, req.inputs),
+                    one, jnp.int32(plen))
+            else:
+                logits, one = self._prefill(
+                    self.params, self._prefill_batch(prompt, req.inputs),
+                    one)
             tok = self.sampler(logits[:, -1], req.temperature,
                                uid=req.uid, index=0)
 
@@ -260,6 +380,32 @@ class Scheduler:
         self.done.append(c)
         self._pending.append(c)
 
+    # -- bucketed decode -----------------------------------------------
+    def _bucketed_decode(self, k: int) -> jnp.ndarray:
+        """One decode step at the best warm batch bucket for ``k``
+        active slots.  Compacts actives into rows ``[0, k)``, slices
+        those rows out of the batched cache, runs the bucket's program
+        and writes the rows back — bit-identical per row to decoding at
+        the full slot count, minus the work for the empty rows."""
+        for src, dst in self.slot_manager.compact():
+            self.last_token[dst, 0] = self.last_token[src, 0]
+        entry, bucket, _ = self._decode_engine.get(k)
+        b = bucket.batch
+        cache = self.slot_manager.cache
+        if b >= self.options.slots:
+            # full-slots program: today's donated in-place path
+            logits, self.slot_manager.cache = entry(
+                self.params, cache, jnp.asarray(self.last_token))
+            return logits[:, 0]
+        sub = jax.tree.map(
+            lambda l: l[:b] if l.ndim == 1 else l[:, :b], cache)
+        logits, sub = entry(self.params, sub,
+                            jnp.asarray(self.last_token[:b]))
+        self.slot_manager.cache = jax.tree.map(
+            lambda f, s: (f.at[:b].set(s) if f.ndim == 1
+                          else f.at[:, :b].set(s)), cache, sub)
+        return logits[:, 0]
+
     # -- the step loop -------------------------------------------------
     def step(self) -> int:
         """One scheduler iteration: admit into free slots, one batched
@@ -269,10 +415,14 @@ class Scheduler:
         active = self.slot_manager.active_slots()
         if not active:
             return 0
-        logits, self.slot_manager.cache = self._decode(
-            self.params, self.slot_manager.cache,
-            jnp.asarray(self.last_token))
-        logits = logits[:, 0]
+        if self._decode_engine is not None:
+            logits = self._bucketed_decode(len(active))
+            active = self.slot_manager.active_slots()  # post-compaction
+        else:
+            logits, self.slot_manager.cache = self._decode(
+                self.params, self.slot_manager.cache,
+                jnp.asarray(self.last_token))
+            logits = logits[:, 0]
         self.metrics.decode_steps += 1
         self.metrics.decode_slot_steps += len(active)
         for slot in active:
@@ -322,7 +472,21 @@ class Scheduler:
 
     # -- reporting -----------------------------------------------------
     def summary(self) -> dict:
-        return self.metrics.summary(self.request_metrics)
+        out = self.metrics.summary(self.request_metrics)
+        if self._decode_engine is not None:
+            engines = {"decode": self._decode_engine.stats()}
+            if self._prefill_engine is not None:
+                engines["prefill"] = self._prefill_engine.stats()
+            rt = {k: sum(e[k] for e in engines.values())
+                  for k in ("bucket_hits", "bucket_misses",
+                            "fallback_serves", "background_compiles",
+                            "compile_stalls")}
+            pad = sum(e["pad_elems"] for e in engines.values())
+            total = sum(e["total_elems"] for e in engines.values())
+            rt["pad_waste_frac"] = (pad / total) if total else 0.0
+            rt.update(engines)
+            out["runtime"] = rt
+        return out
 
     # legacy Engine attribute surface, used by the deprecated shim
     @property

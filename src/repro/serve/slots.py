@@ -14,7 +14,7 @@ Extracted and generalized from ``inference.engine.Engine``'s
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional
+from typing import Any, List, Optional, Tuple
 
 import jax
 
@@ -38,6 +38,9 @@ class SlotManager:
         # donate the batched cache: splice writes one row in place
         self._splice = jax.jit(self._splice_impl, donate_argnums=(0,),
                                static_argnums=(2,))
+        # row move for compaction; src/dst are traced, so one program
+        # serves every (src, dst) pair
+        self._move = jax.jit(self._move_impl, donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     @staticmethod
@@ -50,6 +53,15 @@ class SlotManager:
                 return dst.at[slot].set(src[0])
             return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
         return jax.tree.map(put, cache, one_cache)
+
+    @staticmethod
+    def _move_impl(cache, src, dst):
+        """Copy slot row ``src`` over row ``dst`` in every leaf."""
+        def mv(l):
+            if l.ndim == 1:                        # pos (B,)
+                return l.at[dst].set(l[src])
+            return l.at[:, dst].set(l[:, src])
+        return jax.tree.map(mv, cache)
 
     # ------------------------------------------------------------------
     def free_slots(self) -> List[int]:
@@ -82,3 +94,24 @@ class SlotManager:
             raise RuntimeError(f"slot {slot} is already free")
         self._states[slot] = None
         return st
+
+    # ------------------------------------------------------------------
+    def compact(self) -> List[Tuple[int, int]]:
+        """Move active rows down so they occupy the prefix ``[0, k)`` —
+        the invariant bucketed decode needs to slice the first ``k``
+        cache rows.  Each hole below ``k`` is filled by the *highest*
+        active row (one move per hole, no cascades).  Returns the
+        ``(src, dst)`` moves so the caller can mirror them in host-side
+        per-slot state (``last_token``)."""
+        moves: List[Tuple[int, int]] = []
+        while True:
+            active = self.active_slots()
+            k = len(active)
+            hole = next((s for s in range(k)
+                         if self._states[s] is None), None)
+            if hole is None:
+                return moves
+            src = active[-1]
+            self.cache = self._move(self.cache, src, hole)
+            self._states[hole], self._states[src] = self._states[src], None
+            moves.append((src, hole))

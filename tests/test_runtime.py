@@ -1,0 +1,513 @@
+"""repro.runtime — shape buckets, the engine cache, bucketed
+executables and shape-polymorphic serving.
+
+Unit layers (policy arithmetic, EngineCache state machine) run with
+fake builds and fake clocks; integration layers assert the two load-
+bearing equivalences bit-for-bit: a dispatch served on the nearest warm
+larger bucket equals padding to that bucket explicitly, and a bucketed
+scheduler generates exactly the tokens of the fixed-shape scheduler.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+import repro
+from repro.api.cache import ExecutableCache, prune
+from repro.api.options import CompileOptions
+from repro.core import ModelBuilder
+from repro.runtime import Bucket, BucketPolicy, EngineCache, powers_of_two
+from repro.runtime.bucketed import BucketedExecutable
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mlp():
+    mb = ModelBuilder().seed(0)
+    x = mb.input((16,))
+    h = mb.dense(x, 32, activation="relu")
+    out = mb.build([mb.dense(h, 8)])
+    return out
+
+
+def _out(d):
+    """The single output array of an executable call."""
+    return np.asarray(next(iter(d.values())))
+
+
+class TickClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        self.t += 1.0
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# BucketPolicy: pure arithmetic
+# ---------------------------------------------------------------------------
+def test_powers_of_two_always_includes_hi():
+    assert powers_of_two(1, 8) == (1, 2, 4, 8)
+    assert powers_of_two(1, 6) == (1, 2, 4, 6)
+    assert powers_of_two(3, 3) == (3,)
+    with pytest.raises(ValueError):
+        powers_of_two(4, 2)
+
+
+def test_bucket_for_batch_one_and_exact_boundaries():
+    pol = BucketPolicy(batch_buckets=(1, 2, 4))
+    assert pol.bucket_for(1) == Bucket(1)
+    assert pol.bucket_for(2) == Bucket(2)      # boundary: no round-up
+    assert pol.bucket_for(3) == Bucket(4)
+    assert pol.bucket_for(4) == Bucket(4)
+
+
+def test_bucket_for_above_largest_is_exact_overflow():
+    pol = BucketPolicy(batch_buckets=(1, 2, 4))
+    b = pol.bucket_for(7)
+    assert b == Bucket(7)
+    assert not pol.covers(b)
+    assert pol.covers(Bucket(2))
+
+
+def test_bucket_for_lengths():
+    pol = BucketPolicy(batch_buckets=(1, 4), len_buckets=(8, 32))
+    assert pol.bucket_for(1, 5) == Bucket(1, 8)
+    assert pol.bucket_for(1, 8) == Bucket(1, 8)       # boundary
+    assert pol.bucket_for(3, 9) == Bucket(4, 32)
+    assert pol.bucket_for(1, 40) == Bucket(1, 40)     # length overflow
+    # no length buckets -> lengths are ignored entirely
+    assert BucketPolicy(batch_buckets=(2,)).bucket_for(1, 99) == Bucket(2)
+
+
+def test_policy_validation_and_round_trip():
+    with pytest.raises(ValueError):
+        BucketPolicy(batch_buckets=())
+    with pytest.raises(ValueError):
+        BucketPolicy(batch_buckets=(0, 2))
+    with pytest.raises(ValueError):
+        BucketPolicy(batch_buckets=(2,), len_buckets=(-8,))
+    pol = BucketPolicy(batch_buckets=(4, 1, 2, 2))   # dedup + sort
+    assert pol.batch_buckets == (1, 2, 4)
+    assert BucketPolicy.from_dict(pol.to_dict()) == pol
+
+
+def test_enumerate_and_clip():
+    pol = BucketPolicy(batch_buckets=(1, 2, 8), len_buckets=(16, 64))
+    assert pol.enumerate_buckets() == (
+        Bucket(1, 16), Bucket(1, 64), Bucket(2, 16), Bucket(2, 64),
+        Bucket(8, 16), Bucket(8, 64))
+    clipped = pol.clip(max_batch=4, max_len=48)
+    assert clipped.batch_buckets == (1, 2, 4)
+    assert clipped.len_buckets == (16, 48)
+
+
+def test_pad_waste_accounting():
+    assert BucketPolicy.pad_waste(3, None, Bucket(4)) == pytest.approx(0.25)
+    assert BucketPolicy.pad_waste(4, None, Bucket(4)) == 0.0
+    assert BucketPolicy.pad_waste(1, 10, Bucket(2, 16)) == pytest.approx(
+        1.0 - 10 / 32)
+
+
+# ---------------------------------------------------------------------------
+# EngineCache: hit / miss+fallback / stall state machine
+# ---------------------------------------------------------------------------
+def test_engine_cache_miss_falls_back_then_swaps_in():
+    pol = BucketPolicy(batch_buckets=(1, 2, 4))
+    clock = TickClock()
+    cache = EngineCache(pol, build=lambda b: ("prog", b), worker="manual",
+                        clock=clock)
+    cache.put(Bucket(4), ("prog", Bucket(4)))
+
+    entry, bucket, exact = cache.get(2)       # cold b2: nearest warm is b4
+    assert bucket == Bucket(4) and not exact
+    assert entry == ("prog", Bucket(4))
+    s = cache.stats()
+    assert (s["bucket_misses"], s["fallback_serves"],
+            s["compile_stalls"]) == (1, 1, 0)
+
+    assert cache.drain() == 1                 # background compile lands
+    s = cache.stats()
+    assert s["background_compiles"] == 1
+    assert s["compile_ms"] > 0                # fake clock ticked
+    entry, bucket, exact = cache.get(2)       # now an exact hit
+    assert bucket == Bucket(2) and exact
+    assert cache.stats()["bucket_hits"] == 1
+
+
+def test_engine_cache_stall_when_nothing_covers():
+    pol = BucketPolicy(batch_buckets=(1, 4))
+    cache = EngineCache(pol, build=lambda b: b.batch, worker="manual")
+    entry, bucket, exact = cache.get(3)       # empty cache: must stall
+    assert entry == 4 and bucket == Bucket(4) and exact
+    assert cache.stats()["compile_stalls"] == 1
+    assert cache.get(3)[0] == 4               # warm now
+    assert cache.stats()["compile_stalls"] == 1
+
+
+def test_engine_cache_fallback_never_uses_smaller_bucket():
+    pol = BucketPolicy(batch_buckets=(1, 2, 4))
+    cache = EngineCache(pol, build=lambda b: b, worker="manual")
+    cache.put(Bucket(1), Bucket(1))
+    _, bucket, exact = cache.get(2)           # b1 warm but too small
+    assert bucket == Bucket(2) and exact      # stall-compiled, not b1
+    assert cache.stats()["compile_stalls"] == 1
+
+
+def test_engine_cache_build_failure_surfaces_and_allows_retry():
+    calls = []
+
+    def build(b):
+        calls.append(b)
+        if len(calls) < 3:
+            raise RuntimeError("flaky toolchain")
+        return "ok"
+
+    cache = EngineCache(BucketPolicy(batch_buckets=(2,)), build,
+                        worker="manual")
+    with pytest.raises(RuntimeError):
+        cache.get(2)
+    assert cache.get(2)[0] == "ok"            # in-flight mark was dropped
+
+
+def test_engine_cache_warm_up_blocking_and_stats_keys():
+    pol = BucketPolicy(batch_buckets=(1, 2))
+    cache = EngineCache(pol, build=lambda b: b, worker="manual")
+    cache.warm_up(block=True)
+    assert cache.warm_buckets() == (Bucket(1), Bucket(2))
+    assert cache.wait_warm(timeout=1.0)
+    s = cache.stats()
+    for key in ("bucket_hits", "bucket_misses", "fallback_serves",
+                "background_compiles", "compile_stalls", "compile_ms",
+                "warm_buckets", "pad_elems", "total_elems",
+                "pad_waste_frac"):
+        assert key in s
+
+
+# ---------------------------------------------------------------------------
+# BucketedExecutable: dispatch equivalences
+# ---------------------------------------------------------------------------
+def test_bucketed_fallback_bit_identical_to_explicit_padding(rng):
+    g = _mlp()
+    x = rng.standard_normal((2, 16)).astype(np.float32)
+
+    exact = repro.compile(_mlp(), CompileOptions(target="jit"))
+    want = _out(exact(input=x))
+    padded = np.zeros((4, 16), np.float32)
+    padded[:2] = x
+    want_via_b4 = _out(exact(input=padded))[:2]
+    np.testing.assert_array_equal(want, want_via_b4)
+
+    inner = repro.compile(g, CompileOptions(target="jit"))
+    exe = BucketedExecutable(inner, BucketPolicy(batch_buckets=(1, 2, 4)),
+                             worker="manual")
+    exe.ensure_compiled(4)                    # only b4 is warm
+    got = _out(exe(input=x))        # b2 cold: served on b4
+    s = exe.runtime_stats()
+    assert s["fallback_serves"] == 1 and s["warm_buckets"] == ["b4"]
+    np.testing.assert_array_equal(want, got)
+
+    exe._cache.drain()                        # b2 swaps in
+    got2 = _out(exe(input=x))
+    s = exe.runtime_stats()
+    assert s["bucket_hits"] == 1 and "b2" in s["warm_buckets"]
+    np.testing.assert_array_equal(want, got2)
+    exe.shutdown()
+
+
+def test_bucketed_overflow_batch_compiles_exact(rng):
+    exe = repro.compile(_mlp(), CompileOptions(
+        target="jit", buckets=BucketPolicy(batch_buckets=(1, 2))))
+    x = rng.standard_normal((5, 16)).astype(np.float32)
+    out = _out(exe(input=x))        # above largest bucket
+    assert out.shape == (5, 8)
+    assert "b5" in exe.runtime_stats()["warm_buckets"]
+    want = _out(repro.compile(_mlp(), CompileOptions(target="jit"))(
+        input=x))
+    np.testing.assert_array_equal(want, out)
+    exe.shutdown()
+
+
+def test_compile_options_buckets_validation():
+    with pytest.raises(ValueError):
+        CompileOptions(buckets=BucketPolicy(batch_buckets=(1, 2)),
+                       batch_buckets=(1, 2))      # mutually exclusive
+    with pytest.raises(ValueError):
+        CompileOptions(buckets="b4")
+    with pytest.raises(TypeError):
+        repro.compile(_mlp(), CompileOptions(
+            target="interpret", buckets=BucketPolicy(batch_buckets=(1,))))
+    with pytest.raises(ValueError):               # serving-only knob
+        BucketedExecutable(
+            repro.compile(_mlp(), CompileOptions(target="jit")),
+            BucketPolicy(batch_buckets=(1,), len_buckets=(8,)))
+
+
+def test_bucketed_serialize_round_trip(rng):
+    pol = BucketPolicy(batch_buckets=(1, 2))
+    exe = repro.compile(_mlp(), CompileOptions(target="jit", buckets=pol))
+    x = rng.standard_normal((2, 16)).astype(np.float32)
+    want = _out(exe(input=x))
+    blob = exe.serialize()
+    exe2 = repro.deserialize(blob)
+    assert isinstance(exe2, BucketedExecutable)
+    assert exe2.policy == pol
+    np.testing.assert_array_equal(want, _out(exe2(input=x)))
+    exe.shutdown()
+    exe2.shutdown()
+
+
+def test_cross_process_prewarm_zero_compiles(tmp_path):
+    """Process 1 compiles every bucket into the persistent cache;
+    process 2 constructs the same bucketed executable and starts with
+    every bucket warm — N disk hits, zero compiles, zero stalls."""
+    prog = """
+import json, sys
+sys.path.insert(0, {src!r})
+import numpy as np
+import repro
+from repro.api.options import CompileOptions
+from repro.core import ModelBuilder
+from repro.runtime import BucketPolicy
+mb = ModelBuilder().seed(0)
+x = mb.input((16,))
+h = mb.dense(x, 32, activation="relu")
+g = mb.build([mb.dense(h, 8)])
+exe = repro.compile(g, CompileOptions(
+    target="jit", cache_dir={cache!r},
+    buckets=BucketPolicy(batch_buckets=(1, 2, 4))))
+exe.warm_up(block=True)
+out = list(exe(input=np.ones((3, 16), np.float32)).values())[0]
+stats = exe.runtime_stats()
+print(json.dumps({{"disk": exe.cache_info(), "warm": stats["warm_buckets"],
+                   "stalls": stats["compile_stalls"],
+                   "out": np.asarray(out).tolist()}}))
+"""
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    reports = []
+    for _ in range(2):
+        out = subprocess.run(
+            [sys.executable, "-c",
+             prog.format(src=os.path.join(REPO, "src"),
+                         cache=str(tmp_path))],
+            capture_output=True, text=True, env=env, check=True)
+        reports.append(json.loads(out.stdout.strip().splitlines()[-1]))
+    first, second = reports
+    assert first["disk"]["misses"] == 3       # three buckets compiled
+    assert first["warm"] == ["b1", "b2", "b4"]
+    # second process: pre-warmed entirely from disk at construction
+    assert second["disk"]["hits"] == 3
+    assert second["disk"]["misses"] == 0
+    assert second["warm"] == ["b1", "b2", "b4"]
+    assert second["stalls"] == 0
+    assert first["out"] == second["out"]      # and bit-identical outputs
+
+
+# ---------------------------------------------------------------------------
+# Autotune interop: tactic keys are per-bucket, and both hit on re-run
+# ---------------------------------------------------------------------------
+def test_tactic_keys_distinct_per_bucket_and_hit_on_rerun(tmp_path):
+    pol = BucketPolicy(batch_buckets=(1, 2))
+    opts = CompileOptions(target="pallas", autotune="full",
+                          autotune_budget_ms=20_000,
+                          cache_dir=str(tmp_path), buckets=pol)
+    exe = repro.compile(_mlp(), opts)
+    exe.warm_up(block=True)
+    reports = exe.inner.cost_summary()["autotune"]
+    assert set(reports) == {1, 2}
+    # the buckets' problem shapes differ (m = batch), so their tactic
+    # keys differ — each bucket measured its own tactics
+    assert reports[1]["measured_nodes"] == ["dense_1", "dense_3"]
+    assert reports[2]["measured_nodes"] == ["dense_1", "dense_3"]
+    exe.shutdown()
+
+    exe2 = repro.compile(_mlp(), opts)        # fresh executable, same caches
+    exe2.warm_up(block=True)
+    reports = exe2.inner.cost_summary()["autotune"]
+    for batch in (1, 2):
+        assert reports[batch]["measured_nodes"] == []      # no re-measure
+        assert set(reports[batch]["cached_nodes"]) == {"dense_1", "dense_3"}
+    exe2.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# Cache hygiene: prune / REPRO_CACHE_MAX_BYTES
+# ---------------------------------------------------------------------------
+def test_prune_lru_sweep_and_tmp_cleanup(tmp_path):
+    for i in range(5):
+        p = tmp_path / f"e{i}.xla"
+        p.write_bytes(b"x" * 100)
+        os.utime(p, (i + 1, i + 1))           # e0 oldest ... e4 newest
+    (tmp_path / "orphan.tmp").write_bytes(b"partial")
+    (tmp_path / "notes.txt").write_bytes(b"keep me")
+
+    rep = prune(250, str(tmp_path))
+    assert rep["before_bytes"] == 500
+    assert rep["after_bytes"] == 200          # two newest survive
+    assert rep["removed"] == 4                # three .xla + the .tmp
+    left = sorted(p.name for p in tmp_path.iterdir())
+    assert left == ["e3.xla", "e4.xla", "notes.txt"]
+
+    assert prune(0, str(tmp_path))["after_bytes"] == 0
+    with pytest.raises(ValueError):
+        prune(-1, str(tmp_path))
+    # missing / disabled dirs are a clean no-op
+    assert prune(10, str(tmp_path / "nope"))["removed"] == 0
+
+
+def test_store_auto_prunes_under_env_cap(tmp_path, monkeypatch):
+    def compiled(i):
+        fn = jax.jit(lambda x: x + i)
+        return fn.lower(
+            jax.ShapeDtypeStruct((4,), jnp.float32)).compile()
+
+    cache = ExecutableCache(str(tmp_path))
+    if not cache.store("k0", compiled(0)):
+        pytest.skip("executable serialization unavailable on this jax")
+    assert cache.store("k1", compiled(1))
+    os.utime(tmp_path / "k0.xla", (1, 1))     # k0 is the LRU entry
+    os.utime(tmp_path / "k1.xla", (2, 2))
+    cap = (os.path.getsize(tmp_path / "k0.xla")
+           + os.path.getsize(tmp_path / "k1.xla"))
+    monkeypatch.setenv("REPRO_CACHE_MAX_BYTES", str(cap))
+    assert cache.store("k2", compiled(2))     # overflows: sweep runs
+    left = sorted(p.name for p in tmp_path.glob("*.xla"))
+    assert "k0.xla" not in left               # oldest evicted first
+    assert "k2.xla" in left                   # the fresh store survives
+    assert sum(os.path.getsize(tmp_path / n) for n in left) <= cap
+
+
+# ---------------------------------------------------------------------------
+# Shape-polymorphic serving
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def serve_setup():
+    from repro.configs import get_config
+    from repro.models import get_model
+    cfg = get_config("qwen2.5-14b", smoke=True)
+    m = get_model(cfg)
+    return cfg, m, m.init(jax.random.PRNGKey(0))
+
+
+def test_scheduler_options_buckets_validation():
+    from repro.serve import SchedulerOptions
+    pol = BucketPolicy(batch_buckets=(1, 2))
+    opts = SchedulerOptions(buckets=pol)
+    assert SchedulerOptions(buckets=opts.to_dict()["buckets"]).buckets == pol
+    with pytest.raises(ValueError):
+        SchedulerOptions(buckets=(1, 2))
+
+
+def test_slot_compaction_moves_highest_active_into_hole():
+    from repro.serve.slots import SlotManager, SlotState
+
+    class FakeModel:
+        def init_cache(self, b, max_len):
+            return {"kv": jnp.zeros((2, b, max_len)),
+                    "pos": jnp.zeros((b,), jnp.int32)}
+
+    sm = SlotManager(FakeModel(), slots=4, max_len=8)
+    for slot, uid in ((0, 10), (1, 11), (2, 12)):
+        one = {"kv": jnp.full((2, 1, 8), float(uid)),
+               "pos": jnp.full((1,), uid, jnp.int32)}
+        sm.admit(slot, SlotState(uid=uid, remaining=4, eos_id=-1,
+                                 temperature=0.0), one)
+    assert sm.compact() == []                 # already a prefix
+    sm.evict(0)
+    assert sm.compact() == [(2, 0)]           # highest active fills hole
+    assert [st.uid if st else None for st in sm._states] == \
+        [12, 11, None, None]
+    assert float(sm.cache["kv"][0, 0, 0]) == 12.0
+    assert int(sm.cache["pos"][0]) == 12
+
+
+def test_bucketed_serving_tokens_identical_to_fixed(serve_setup):
+    from repro.serve import Request, Scheduler, SchedulerOptions
+    cfg, m, params = serve_setup
+    rng = np.random.RandomState(3)
+    prompts = [rng.randint(1, 50, size=(l,)).astype(np.int32)
+               for l in (3, 9, 17, 5, 21, 12)]
+
+    def run(buckets):
+        kw = {"engine_worker": "manual"} if buckets is not None else {}
+        s = Scheduler(m, params, SchedulerOptions(
+            slots=3, max_len=32, fold=False, buckets=buckets), **kw)
+        for i, p in enumerate(prompts):
+            s.submit(Request(uid=i, prompt=p, max_new_tokens=4))
+        done = s.run()
+        toks = {c.uid: c.tokens for c in done}
+        summ = s.summary()
+        s.shutdown()
+        return toks, summ
+
+    base, base_summ = run(None)
+    assert "runtime" not in base_summ          # fixed-shape: no new keys
+    pol = BucketPolicy.default(max_batch=3, max_len=32, min_len=8)
+    buck, summ = run(pol)
+    assert buck == base                        # greedy tokens, bit-equal
+    rt = summ["runtime"]
+    assert rt["bucket_hits"] > 0
+    assert rt["pad_waste_frac"] > 0            # mixed lengths did pad
+    assert set(rt["decode"]) >= {"bucket_hits", "warm_buckets"}
+    assert set(rt["prefill"]) >= {"bucket_hits", "warm_buckets"}
+    # the full-slots decode program is warmed synchronously at build,
+    # so the decode path can never stall
+    assert rt["decode"]["compile_stalls"] == 0
+
+
+def test_bucketed_scheduler_steady_state_no_stalls(serve_setup):
+    from repro.serve import Request, Scheduler, SchedulerOptions
+    cfg, m, params = serve_setup
+    clock = TickClock()
+    pol = BucketPolicy(batch_buckets=(1, 2), len_buckets=(8, 32))
+    s = Scheduler(m, params, SchedulerOptions(
+        slots=2, max_len=32, fold=False, buckets=pol),
+        engine_worker="manual", clock=clock)
+    rng = np.random.RandomState(0)
+
+    s.submit(Request(uid=0, prompt=rng.randint(1, 50, size=(5,)),
+                     max_new_tokens=3))
+    s.run()
+    first = s.summary()["runtime"]
+    # cold prefill bucket: the one allowed stall, drained inline in
+    # manual mode (which also lands the queued background compiles)
+    assert first["compile_stalls"] == 1
+    assert first["background_compiles"] > 0
+    assert s.wait_warm(timeout=5.0)
+
+    for uid, plen in ((1, 4), (2, 7), (3, 20), (4, 30)):
+        s.submit(Request(uid=uid, prompt=rng.randint(1, 50, size=(plen,)),
+                         max_new_tokens=3))
+    s.run()
+    steady = s.summary()["runtime"]
+    assert steady["compile_stalls"] == first["compile_stalls"]  # zero new
+    assert steady["bucket_hits"] > first["bucket_hits"]
+    s.shutdown()
+
+
+def test_ring_cache_models_disable_length_buckets(serve_setup):
+    """All-sliding-window models allocate a ring cache shorter than
+    max_len; padded prefill would roll real tokens out, so length
+    bucketing must switch itself off (batch bucketing stays on)."""
+    import dataclasses
+    from repro.models import get_model
+    from repro.serve import Scheduler, SchedulerOptions
+    cfg, _, _ = serve_setup
+    ring_cfg = dataclasses.replace(cfg, pattern="swa", window=8)
+    m = get_model(ring_cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    pol = BucketPolicy(batch_buckets=(1, 2), len_buckets=(8, 16))
+    s = Scheduler(m, params, SchedulerOptions(
+        slots=2, max_len=32, fold=False, buckets=pol),
+        engine_worker="manual")
+    assert s._decode_engine is not None
+    assert s._prefill_engine is None
+    s.shutdown()
