@@ -57,6 +57,15 @@ def run(models: Sequence[str] = ("C-BH", "MobileNetV2"),
                 jax.block_until_ready(fn(x))
             dt = (time.perf_counter() - t0) / reps
             cost = exe.cost_summary()
+            # Which graph-level decisions were actually active in this
+            # variant: the pass counters (how many sites fused /
+            # re-laid-out) plus any autotuned decision report — so a
+            # trajectory entry is attributable to its decisions.
+            stats = {}
+            for p in cost["passes"]:
+                for key in ("fused_activations", "transposed", "padded"):
+                    if key in p:
+                        stats[key] = stats.get(key, 0) + p[key]
             rows.append({
                 "model": name,
                 "variant": variant,
@@ -66,6 +75,8 @@ def run(models: Sequence[str] = ("C-BH", "MobileNetV2"),
                 "inplace": cost["memory_plan"]["inplace_count"],
                 "pass_time_ms": sum(p["time_ms"] for p in cost["passes"]),
                 "time_ms": dt * 1e3,
+                "decisions": stats,
+                "autotune": cost.get("graph_decisions"),
             })
     return rows
 

@@ -39,6 +39,24 @@ def _time_call(fn, *args, reps=20, warmup=3) -> float:
     return float(np.min(times))
 
 
+def _active_decisions(exe) -> Optional[Dict]:
+    """Compact record of the graph-level decisions a tuned executable is
+    running with: per-site winner + source, and the chosen pipeline —
+    the attribution line for trajectory artifacts."""
+    rep = exe.cost_summary().get("graph_decisions")
+    if rep is None:
+        return None
+    return {
+        "pipeline": rep.get("pipeline"),
+        "sites": [
+            {"kind": r["kind"], "node": r["node"],
+             "winner": r.get("winner"), "source": r.get("source")}
+            for r in rep.get("sites", [])
+        ],
+        "spent_ms": rep.get("spent_ms"),
+    }
+
+
 def run(reps: int = 20,
         configs: Optional[Sequence[str]] = None,
         autotune: bool = False,
@@ -109,6 +127,10 @@ def run(reps: int = 20,
                 "pallas_autotuned_ms": t_tuned * 1e3,
                 "autotune_speedup": t_simple / t_tuned,
                 "autotune_max_abs_err": tuned_err,
+                # Which graph-level decisions the tuned compile actually
+                # ran with — without this a tuned-fusion run is
+                # indistinguishable from heuristic in the artifact.
+                "graph_decisions": _active_decisions(tuned),
                 # the gate's numeric ceiling covers whichever path the
                 # run actually exercised
                 "max_abs_err": max(err, tuned_err),

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Docstring coverage gate (stdlib-only; CI: docs-gates job).
+
+Walks ``src/repro/api``, ``src/repro/autotune``, ``src/repro/runtime``
+and ``src/repro/replay`` with the ``ast`` module, counts docstrings on
+modules, public classes and public functions/methods (names not starting
+with ``_``, plus ``__init__`` is exempt), and fails if coverage drops
+below the recorded floor.
+
+The floor is a ratchet: raise it when coverage improves, never lower it
+to absorb an undocumented addition.
+
+Usage::
+
+    python scripts/check_docstrings.py            # gate (exit 1 below floor)
+    python scripts/check_docstrings.py --list     # show undocumented objects
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import os
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: Packages whose public surface must be documented.
+PACKAGES = ("src/repro/api", "src/repro/autotune", "src/repro/runtime",
+            "src/repro/replay")
+
+#: Minimum fraction of public objects with docstrings.  Ratchet only
+#: upward.  Recorded at 1.00 in PR 7 (every public object documented);
+#: kept a hair under to tolerate a __main__ shim.
+FLOOR = 0.97
+
+
+def _is_public(name: str) -> bool:
+    return not name.startswith("_")
+
+
+def _walk_objects(tree: ast.Module, path: str):
+    """Yield (qualname, has_docstring) for the module, public classes,
+    and public functions/methods."""
+    yield path, ast.get_docstring(tree) is not None
+
+    def visit(node, prefix):
+        for child in node.body if hasattr(node, "body") else ():
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if _is_public(child.name):
+                    yield (f"{prefix}{child.name}",
+                           ast.get_docstring(child) is not None)
+            elif isinstance(child, ast.ClassDef):
+                if _is_public(child.name):
+                    yield (f"{prefix}{child.name}",
+                           ast.get_docstring(child) is not None)
+                    yield from visit(child, f"{prefix}{child.name}.")
+
+    yield from visit(tree, f"{path}::")
+
+
+def collect():
+    rows = []
+    for pkg in PACKAGES:
+        root = os.path.join(REPO, pkg)
+        for dirpath, _, names in os.walk(root):
+            for name in sorted(names):
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, name)
+                rel = os.path.relpath(path, REPO)
+                with open(path) as f:
+                    tree = ast.parse(f.read(), filename=rel)
+                rows.extend(_walk_objects(tree, rel))
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--list", action="store_true",
+                    help="list undocumented public objects")
+    args = ap.parse_args(argv)
+
+    rows = collect()
+    documented = sum(1 for _, ok in rows if ok)
+    total = len(rows)
+    coverage = documented / total if total else 1.0
+    missing = [name for name, ok in rows if not ok]
+    if args.list or missing:
+        for name in missing:
+            print(f"undocumented: {name}")
+    print(f"docstring coverage: {documented}/{total} = {coverage:.1%} "
+          f"(floor {FLOOR:.0%})")
+    if coverage < FLOOR:
+        print(f"FAIL: coverage fell below the recorded floor; document "
+              f"the objects above (never lower the floor)", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,81 @@
+#!/usr/bin/env python3
+"""Relative-link checker for the repo's markdown (stdlib-only; CI:
+docs-gates job).
+
+Scans README.md, ROADMAP.md and everything under docs/ for markdown
+links, and verifies that every *relative* target resolves to a file or
+directory in the repo (fragments are stripped; ``http(s)://`` and
+``mailto:`` targets are skipped — external availability is not this
+gate's business).  Also resolves ``path.py:symbol`` code pointers used
+throughout docs/ down to the file part.
+
+Usage::
+
+    python scripts/check_links.py            # gate (exit 1 on any broken link)
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: Files and directories whose relative links must resolve.
+SOURCES = ("README.md", "ROADMAP.md", "docs")
+
+#: ``[text](target)`` — non-greedy target, tolerates titles after a space.
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def _markdown_files():
+    for src in SOURCES:
+        path = os.path.join(REPO, src)
+        if os.path.isfile(path):
+            yield path
+        elif os.path.isdir(path):
+            for dirpath, _, names in os.walk(path):
+                for name in sorted(names):
+                    if name.endswith(".md"):
+                        yield os.path.join(dirpath, name)
+
+
+def check_file(path: str):
+    """Yield (lineno, target) for each broken relative link in ``path``."""
+    base = os.path.dirname(path)
+    with open(path) as f:
+        for lineno, line in enumerate(f, 1):
+            for m in LINK_RE.finditer(line):
+                target = m.group(1)
+                if target.startswith(SKIP_SCHEMES):
+                    continue
+                # strip fragment, then any :symbol / :line suffix
+                target = target.split("#", 1)[0]
+                if not target:
+                    continue
+                file_part = target.split(":", 1)[0]
+                resolved = os.path.normpath(os.path.join(base, file_part))
+                if not os.path.exists(resolved):
+                    yield lineno, m.group(1)
+
+
+def main() -> int:
+    """Walk every markdown source; exit 1 when a relative link is broken."""
+    broken = []
+    n_files = 0
+    for path in _markdown_files():
+        n_files += 1
+        rel = os.path.relpath(path, REPO)
+        for lineno, target in check_file(path):
+            broken.append((rel, lineno, target))
+    for rel, lineno, target in broken:
+        print(f"broken link: {rel}:{lineno} -> {target}")
+    print(f"link check: {n_files} files scanned, {len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

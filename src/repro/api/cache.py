@@ -118,6 +118,7 @@ class ExecutableCache:
         return True
 
     def stats(self) -> dict:
+        """Hit/miss counters for this process plus the cache directory."""
         return {"dir": self.root, "hits": self.hits, "misses": self.misses}
 
 
@@ -172,6 +173,9 @@ def prune(max_bytes: int, cache_dir: Optional[str] = None) -> dict:
 
 
 def open_cache(explicit_dir: Optional[str]) -> Optional[ExecutableCache]:
+    """Open the executable cache at ``explicit_dir`` (or the resolved
+    default root); returns ``None`` when caching is disabled or the
+    directory cannot be created."""
     root = resolve_cache_dir(explicit_dir)
     if not root:
         return None

@@ -27,6 +27,10 @@ from .options import CompileOptions
 
 
 class ModelExecutable(Executable):
+    """Executable over a registered model architecture (the ``"engine"``
+    target): wraps ``model.forward`` in one jitted program with params
+    closed over, tracking compile time per unseen input signature."""
+
     def __init__(self, model_or_cfg, options: CompileOptions, *,
                  params=None, init_seed: int = 0) -> None:
         from ..models.api import Model, get_model
@@ -76,6 +80,8 @@ class ModelExecutable(Executable):
 
     # ------------------------------------------------------------------
     def cost_summary(self):
+        """Model-level cost facts: parameter count and byte footprint
+        (engine executables have no pass pipeline to report)."""
         leaves = jax.tree_util.tree_leaves(self.params)
         return {
             "target": "engine",
@@ -87,6 +93,7 @@ class ModelExecutable(Executable):
         }
 
     def serialize(self) -> bytes:
+        """Pack cfg + param leaves into the portable artifact format."""
         # The param pytree structure is NOT stored: it is rederived from
         # the cfg at load time (no pickle — repro.deserialize must be
         # safe on untrusted bytes).  Only leaves travel, in
@@ -109,6 +116,8 @@ class ModelExecutable(Executable):
 
 def deserialize_engine(meta: dict, body: bytes,
                        options: CompileOptions) -> ModelExecutable:
+    """Rebuild a ``ModelExecutable`` from a packed artifact: cfg from
+    metadata, param leaves from the npz body (no pickle)."""
     from ..configs.base import ArchConfig
     from ..core.keras_like import _tuplify
     from ..models.api import get_model

@@ -62,12 +62,17 @@ class Executable(abc.ABC):
 # ---------------------------------------------------------------------------
 def pack(kind: str, options: CompileOptions, body: bytes,
          extra: Optional[dict] = None) -> bytes:
+    """Frame ``body`` in the artifact container: magic line, one JSON
+    metadata line (format/version/kind/options + ``extra``), then the
+    raw payload bytes."""
     meta = {"format": FORMAT, "version": VERSION, "kind": kind,
             "options": options.to_dict(), **(extra or {})}
     return MAGIC + b"\n" + json.dumps(meta, default=str).encode() + b"\n" + body
 
 
 def unpack(data: bytes):
+    """Split container bytes into ``(meta, body)``, validating magic,
+    format and version; raises ``ValueError`` on anything malformed."""
     try:
         magic, meta_line, body = data.split(b"\n", 2)
     except ValueError:
@@ -88,9 +93,9 @@ def deserialize(data: bytes) -> Executable:
     options = CompileOptions.from_dict(meta["options"])
     # Never honor a cache_dir embedded in (possibly untrusted) bytes:
     # the cache pickle-loads from that directory.  None still falls
-    # back to the local $REPRO_CACHE_DIR.  Same for dump_ir, which
-    # writes files to an arbitrary path.
-    options = options.replace(cache_dir=None, dump_ir=None)
+    # back to the local $REPRO_CACHE_DIR.  Same for dump_ir and
+    # capture, which write files to an arbitrary path.
+    options = options.replace(cache_dir=None, dump_ir=None, capture=None)
     kind = meta.get("kind")
     if kind in ("graph", "bucketed"):
         from ..frontends.container import load_model

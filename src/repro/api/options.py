@@ -64,7 +64,21 @@ class CompileOptions:
     autotune_budget_ms: wall-clock budget for ``"full"`` measurement per
                    compile (candidate jit compiles included); shapes the
                    budget doesn't reach fall back to the heuristic.
-                   ``None`` = unlimited.
+                   ``None`` = unlimited.  Graph-level decision tuning
+                   (``repro.autotune.decisions``) takes at most half of
+                   it; per-node kernel tactics get the remainder.
+    capture:       write a self-contained capture bundle for this
+                   compile (``repro.api.capture``): the serialized input
+                   graph, the options, per-pass IR dumps, the kernel and
+                   graph-decision selection reports with per-candidate
+                   µs, recorded input/output tensors per batch, and the
+                   environment fingerprint — everything
+                   ``python -m repro.replay <bundle>`` needs to re-run
+                   the compile offline and diff it against the record.
+                   A directory path = the bundle directory itself.
+                   ``None`` falls back to ``$REPRO_CAPTURE_DIR`` (a
+                   *root*: the bundle lands in a per-compile
+                   subdirectory); unset disables capture.
     """
 
     target: str = "jit"
@@ -78,6 +92,7 @@ class CompileOptions:
     dump_ir: Optional[str] = None
     autotune: str = "off"
     autotune_budget_ms: Optional[float] = 1000.0
+    capture: Optional[str] = None
 
     def __post_init__(self) -> None:
         if self.precision not in PRECISIONS:
@@ -116,13 +131,17 @@ class CompileOptions:
 
     # ------------------------------------------------------------------
     def replace(self, **kw) -> "CompileOptions":
+        """Copy with the given fields replaced (options are frozen)."""
         return dataclasses.replace(self, **kw)
 
     def to_dict(self) -> dict:
+        """Plain-dict form for JSON artifacts; invert with ``from_dict``."""
         return dataclasses.asdict(self)
 
     @classmethod
     def from_dict(cls, d: dict) -> "CompileOptions":
+        """Rebuild options from ``to_dict`` output (re-tuplifying the
+        fields JSON round-trips as lists)."""
         d = dict(d)
         if d.get("passes") is not None:
             d["passes"] = tuple(d["passes"])
@@ -152,4 +171,5 @@ class CompileOptions:
         d.pop("dump_ir")
         d.pop("autotune")
         d.pop("autotune_budget_ms")
+        d.pop("capture")   # a recording side channel, like dump_ir
         return json.dumps(d, sort_keys=True, default=str)

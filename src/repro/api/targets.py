@@ -56,6 +56,7 @@ def register_target(name: str) -> Callable[[TargetFactory], TargetFactory]:
 
 
 def get_target(name: str) -> TargetFactory:
+    """Look up a registered target factory; KeyError lists what exists."""
     try:
         return _TARGETS[name]
     except KeyError:
@@ -65,6 +66,7 @@ def get_target(name: str) -> TargetFactory:
 
 
 def available_targets() -> Tuple[str, ...]:
+    """Sorted names of every registered compile target."""
     return tuple(sorted(_TARGETS))
 
 
@@ -80,6 +82,8 @@ class GraphExecutable(Executable):
         self.compile_time: Optional[float] = None
 
     def serialize(self) -> bytes:
+        """Pack the source graph + options + signature into the portable
+        artifact container (recompiled, not unpickled, on load)."""
         buf = io.BytesIO()
         save_model(self.source, buf)
         return pack("graph", self.options, buf.getvalue(),
@@ -142,6 +146,7 @@ class InterpretExecutable(GraphExecutable):
             self._nn(**dict(zip(self.source.inputs, args))))
 
     def cost_summary(self):
+        """Source-graph counts only — the interpreter runs no passes."""
         return {
             "target": self.options.target,
             "nodes": len(self.source.nodes),
@@ -169,8 +174,44 @@ class JitExecutable(GraphExecutable):
         self.lowering_target = (lowering_target
                                 or ("pallas" if use_pallas else "jit"))
         t0 = time.perf_counter()
+        # Capture bundle (CompileOptions.capture / $REPRO_CAPTURE_DIR):
+        # records the *input* graph, then tees IR dumps and selection
+        # reports below.  self.capture_path is the bundle dir or None.
+        from .capture import CaptureSession, resolve_capture_dir
+        self.capture_path = resolve_capture_dir(
+            options.capture, graph, self.lowering_target)
+        self._capture = (CaptureSession(self.capture_path, graph, options,
+                                        lowering_target=self.lowering_target)
+                         if self.capture_path else None)
+        # Graph-level decision tuning (repro.autotune.decisions): winners
+        # land as tune.* attrs on a copy — self.source stays the
+        # untouched input graph — and may swap the pass pipeline.  With
+        # autotune="off" nothing runs and the compile is bit-identical
+        # to the heuristic pipeline.
+        self._decisions_report: Optional[dict] = None
+        effective_graph, effective_passes = graph, options.passes
+        if options.autotune != "off":
+            from ..autotune import open_tactic_cache, tune_graph_decisions
+            effective_graph, effective_passes, self._decisions_report = (
+                tune_graph_decisions(
+                    graph,
+                    target=self.lowering_target,
+                    precision=options.precision,
+                    passes=options.passes,
+                    mode=options.autotune,
+                    budget_ms=options.autotune_budget_ms,
+                    cache=open_tactic_cache(options.cache_dir)))
+        dump_ir = options.dump_ir
+        if self._capture is not None:
+            from ..core.passes.manager import _resolve_dump_ir
+            # Tee the per-pass IR into the bundle alongside any
+            # user-requested sink (including $REPRO_DUMP_IR).
+            dump_ir = list(_resolve_dump_ir(dump_ir)) + [self._capture.ir_dir]
         self.graph, self.report = run_pipeline(
-            graph, options.passes, dump_ir=options.dump_ir)
+            effective_graph, effective_passes, dump_ir=dump_ir)
+        if self._capture is not None:
+            self._capture.record_pipeline(self.report,
+                                          self._decisions_report)
         self._pass_time = time.perf_counter() - t0
         # ensure_compiled may be entered from a BucketedExecutable's
         # background-compile worker concurrently with the request path;
@@ -185,6 +226,7 @@ class JitExecutable(GraphExecutable):
 
     @property
     def use_pallas(self) -> bool:
+        """True when dense ops lower through hand-written Pallas kernels."""
         return self.lowering_target == "pallas"
 
     # -- cache key -----------------------------------------------------
@@ -240,12 +282,19 @@ class JitExecutable(GraphExecutable):
             from ..autotune import open_tactic_cache, tune_selection
             mode = ("cached" if probe and self.options.autotune == "full"
                     else self.options.autotune)
+            # Graph-level decision tuning already spent part of the
+            # budget at construction time; kernel tactics get the rest.
+            budget = self.options.autotune_budget_ms
+            if budget is not None and self._decisions_report is not None:
+                budget = max(
+                    0.0,
+                    budget - self._decisions_report.get("spent_ms", 0.0))
             selection, report = tune_selection(
                 self.graph, selection,
                 batch_size=batch_size,
                 precision=self.options.precision,
                 mode=mode,
-                budget_ms=self.options.autotune_budget_ms,
+                budget_ms=budget,
                 cache=open_tactic_cache(self.options.cache_dir))
         return selection, report
 
@@ -329,6 +378,15 @@ class JitExecutable(GraphExecutable):
             pass
         fn = wrap(exe)
         self._fns[batch_size] = fn
+        if self._capture is not None:
+            # Record this specialization: resolved selection, autotune
+            # report, and one seeded forward pass replay can diff.
+            from .capture import seeded_inputs
+            ins = seeded_inputs(self.graph, batch_size)
+            out = fn(*[jnp.asarray(v) for v in ins.values()])
+            self._capture.record_batch(
+                batch_size, selection or {}, report, ins,
+                {k: np.asarray(v) for k, v in out.items()})
         # Total seconds spent compiling: pass pipeline once, plus every
         # per-batch-size XLA compile so far.
         base = (self.compile_time if self.compile_time is not None
@@ -365,11 +423,15 @@ class JitExecutable(GraphExecutable):
 
     # -- introspection -------------------------------------------------
     def cache_info(self) -> dict:
+        """Executable disk-cache counters (zeros when caching is off)."""
         if self._disk is None:
             return super().cache_info()
         return self._disk.stats()
 
     def cost_summary(self):
+        """Compile-time facts for this executable: pass reports, memory
+        plan, per-batch kernel selections, and — when tuned — the
+        autotune and graph-decision reports."""
         out = {
             "target": self.options.target,
             "nodes": len(self.graph.nodes),
@@ -389,10 +451,18 @@ class JitExecutable(GraphExecutable):
                 for batch, sel in sorted(self._selections.items())
             }
         if self._autotune_reports:
+            # Raw cache "entries" are a capture-bundle implementation
+            # detail; the human-facing report is everything else.
             out["autotune"] = {
-                batch: rep
+                batch: {k: v for k, v in rep.items() if k != "entries"}
                 for batch, rep in sorted(self._autotune_reports.items())
             }
+        if self._decisions_report is not None:
+            # Graph-level decisions (fusion/layout/pipeline winners with
+            # per-candidate µs) — see repro.autotune.decisions.
+            out["graph_decisions"] = {
+                k: v for k, v in self._decisions_report.items()
+                if k != "entries"}
         if self._xla_cost:
             out["xla"] = {k: self._xla_cost[k]
                           for k in ("flops", "bytes accessed")

@@ -1,25 +1,41 @@
-"""repro.autotune — profile-guided kernel autotuning.
+"""repro.autotune — profile-guided autotuning, kernel- and graph-level.
 
 The static selector (``repro.core.selection``) encodes "statically known
 properties of the network" as hand-written heuristics; this package
-replaces the guess with a measurement where one is available.  Per
-``(op, shapes, dtype, batch, target)`` key it enumerates candidate
-tactics (registered kernel lowerings × block geometries), benchmarks
-them with the min-of-reps estimator, and records the winner in a
-persistent on-disk tactic cache — measure once, remember forever.
+replaces the guess with a measurement where one is available.  Two
+layers share one machinery:
 
-Driven by ``CompileOptions(autotune="off"|"cached"|"full",
-autotune_budget_ms=…)``; see :mod:`repro.autotune.tuner` for the pass
-and :mod:`repro.autotune.cache` for the cache/fingerprint contract.
+* **kernel tactics** (:mod:`~repro.autotune.tuner`) — per ``(op,
+  shapes, dtype, batch, target)`` key, enumerate candidate lowerings ×
+  block geometries, benchmark with the min-of-reps estimator, record
+  the winner.
+* **graph decisions** (:mod:`~repro.autotune.decisions`) — per
+  graph-region digest, measure the choices the passes otherwise guess:
+  fusion on/off per site, dense kernel layout, whole pass-pipeline
+  variants.
+
+Both persist winners in the same fingerprinted on-disk tactic cache
+(:mod:`~repro.autotune.cache`) — measure once, remember forever; a
+second process with ``CompileOptions(autotune="cached")`` replays every
+decision without measuring.  Driven by
+``CompileOptions(autotune="off"|"cached"|"full", autotune_budget_ms=…)``.
 """
 
 from .cache import (TACTICS_SUBDIR, TacticCache, environment_fingerprint,
                     open_tactic_cache, tactic_key)
+from .decisions import (DecisionSite, GRAPH_BUDGET_FRACTION, enumerate_sites,
+                        extract_region, region_digest, tune_graph_decisions)
 from .measure import Deadline, bench_min_us
 from .tactics import NodeTactics, Tactic, candidates_for_node
 from .tuner import AUTOTUNE_MODES, tune_selection
 
 __all__ = [
+    "DecisionSite",
+    "GRAPH_BUDGET_FRACTION",
+    "enumerate_sites",
+    "extract_region",
+    "region_digest",
+    "tune_graph_decisions",
     "AUTOTUNE_MODES",
     "Deadline",
     "NodeTactics",

@@ -131,6 +131,7 @@ class TacticCache:
             return False
 
     def stats(self) -> dict:
+        """Hit/miss/store counters for this process plus the cache dir."""
         return {"dir": self.root, "hits": self.hits, "misses": self.misses,
                 "stores": self.stores}
 

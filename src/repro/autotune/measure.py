@@ -21,6 +21,7 @@ import jax
 
 
 def now_ms() -> float:
+    """Monotonic wall clock in milliseconds."""
     return time.perf_counter() * 1e3
 
 
@@ -33,9 +34,11 @@ class Deadline:
         self.budget_ms = budget_ms
 
     def spent_ms(self) -> float:
+        """Milliseconds elapsed since the deadline was created."""
         return now_ms() - self.start_ms
 
     def expired(self) -> bool:
+        """True once the budget is spent (never with a None budget)."""
         return (self.budget_ms is not None
                 and self.spent_ms() >= self.budget_ms)
 

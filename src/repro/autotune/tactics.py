@@ -58,6 +58,7 @@ class Tactic:
 
     @property
     def label(self) -> str:
+        """Human-readable name, e.g. ``matmul_tiled[128x128]``."""
         if self.block is None:
             return self.kernel
         return f"{self.kernel}[{'x'.join(str(b) for b in self.block)}]"

@@ -149,5 +149,9 @@ def tune_selection(
         "cached_nodes": cached_nodes,
         "heuristic_nodes": heuristic_nodes,
         "cache": cache.stats() if cache is not None else None,
+        # Raw cache entries by tactic key — capture bundles persist these
+        # so replay can seed a fresh cache and reproduce the selection
+        # with mode="cached".  Stripped from cost_summary().
+        "entries": dict(memo),
     }
     return tuned, report

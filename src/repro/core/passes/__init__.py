@@ -36,8 +36,8 @@ from typing import Dict, Optional, Sequence, Tuple
 
 from ..graph import Graph
 from .manager import (PassManager, PassOrderingError, PassVerificationError,
-                      register_pass, registered_passes, resolve_order,
-                      unregister_pass)
+                      pipeline_candidates, register_pass, registered_passes,
+                      resolve_order, unregister_pass)
 
 # Importing a pass module registers it; import order is the tie-break
 # order for constraint resolution.
@@ -64,7 +64,7 @@ def run_pipeline(
     passes: Optional[Sequence[str]] = None,
     *,
     verify: bool = True,
-    dump_ir: Optional[str] = None,
+    dump_ir=None,
 ) -> Tuple[Graph, Dict]:
     """Run the pass pipeline; returns the optimized graph and a report
     with per-pass statistics plus the memory plan.
@@ -81,6 +81,7 @@ __all__ = [
     "PassManager",
     "PassOrderingError",
     "PassVerificationError",
+    "pipeline_candidates",
     "register_pass",
     "registered_passes",
     "resolve_order",

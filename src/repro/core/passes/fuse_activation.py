@@ -20,6 +20,14 @@ from .manager import register_pass
 
 FUSABLE_PRODUCERS = ("conv2d", "depthwise_conv2d", "dense")
 
+#: Tuning-site hook: when the graph-level autotuner has measured that an
+#: activation is better left unfused (``repro.autotune.decisions``), it
+#: sets this attr to ``False`` on the activation node and the pass skips
+#: that site.  Absent / ``True`` keeps the heuristic (fuse when legal),
+#: so ``autotune="off"`` is bit-identical.  The attr is *not* popped:
+#: the pass runs twice (base + ``.post_bn``) and both must honor it.
+TUNE_FUSE_ATTR = "tune.fuse"
+
 
 # Registered twice (see passes/__init__): once before BN folding so the
 # conv→act→BN pattern can fold as a post-activation affine (§3.5), and
@@ -39,6 +47,8 @@ def fuse_activation(graph: Graph) -> Tuple[Graph, Dict]:
             fn = act.attrs["fn"]
             if not ACTIVATIONS.get(fn, False):
                 continue  # not fusable (softmax)
+            if act.attrs.get(TUNE_FUSE_ATTR) is False:
+                continue  # autotuner measured this site faster unfused
             src = g.producer(act.inputs[0])
             if src is None or src.op not in FUSABLE_PRODUCERS:
                 continue

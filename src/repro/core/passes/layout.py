@@ -43,6 +43,14 @@ SUBLANE_ALIGN = SUBLANE
 #: of forcing one scheme.)
 MAX_PAD_RATIO = 1.5
 
+#: Tuning-site hook: the graph-level autotuner
+#: (``repro.autotune.decisions``) sets this attr on a dense node to pin
+#: the kernel storage layout to ``"oi"`` or ``"io"``, overriding the
+#: row-count heuristic below.  Absent keeps the heuristic, so
+#: ``autotune="off"`` is bit-identical.  An explicit user
+#: ``kernel_layout`` attr still wins over both.
+TUNE_LAYOUT_ATTR = "tune.layout"
+
 
 _pad_to = ceil_to
 
@@ -63,7 +71,10 @@ def optimize_layout(graph: Graph) -> Tuple[Graph, Dict]:
         rows = max(1, in_spec.size // max(1, in_spec.shape[-1]))
 
         # 1. contraction-major storage for GEMV-shaped products.
-        if rows < SUBLANE_ALIGN and node.attrs.get("kernel_layout") is None:
+        tuned = node.attrs.get(TUNE_LAYOUT_ATTR)
+        want_oi = (tuned == "oi") if tuned in ("oi", "io") else (
+            rows < SUBLANE_ALIGN)
+        if want_oi and node.attrs.get("kernel_layout") is None:
             g.params[node.params["kernel"]] = np.ascontiguousarray(k.T)
             node.attrs["kernel_layout"] = "oi"
             transposed += 1

@@ -153,10 +153,35 @@ def _lookup(name: str) -> PassSpec:
     )
 
 
-def _resolve_dump_ir(dump_ir: Optional[str]) -> Optional[str]:
+def _resolve_dump_ir(dump_ir) -> Tuple[str, ...]:
+    """Normalize a dump_ir setting to a tuple of sinks.  Accepts None
+    (fall back to ``$REPRO_DUMP_IR``), a single directory / ``-`` /
+    ``stderr`` string, or a sequence of such sinks (capture bundles tee
+    the IR dumps into the bundle alongside any user-requested sink)."""
     if dump_ir is None:
         dump_ir = os.environ.get("REPRO_DUMP_IR") or None
-    return dump_ir
+    if dump_ir is None:
+        return ()
+    if isinstance(dump_ir, str):
+        return (dump_ir,)
+    return tuple(dump_ir)
+
+
+def pipeline_candidates() -> Dict[str, Tuple[str, ...]]:
+    """Named whole-pipeline variants the graph-level autotuner may pick
+    between (``repro.autotune.decisions``, "pipeline" sites).
+
+    Each variant is derived from the current default registry order by
+    ``PassManager.without`` surgery, so a newly registered pass is
+    automatically part of every variant.  ``"default"`` is always
+    present and always first.
+    """
+    default = PassManager.default()
+    return {
+        "default": default.pipeline,
+        "no_fusion": default.without("fuse_activation").pipeline,
+        "no_layout": default.without("optimize_layout").pipeline,
+    }
 
 
 class PassManager:
@@ -173,7 +198,7 @@ class PassManager:
         pipeline: Optional[Sequence[str]] = None,
         *,
         verify: bool = True,
-        dump_ir: Optional[str] = None,
+        dump_ir: Optional[object] = None,  # str | Sequence[str] | None
     ) -> None:
         if pipeline is None:
             self._specs = [_REGISTRY[n] for n in resolve_order()]
@@ -212,13 +237,15 @@ class PassManager:
         if not self.dump_ir:
             return
         text = graph.summary()
-        if self.dump_ir in ("-", "stderr"):
-            print(f"// IR after {stage:02d}-{name}\n{text}", file=sys.stderr)
-            return
-        os.makedirs(self.dump_ir, exist_ok=True)
-        path = os.path.join(self.dump_ir, f"{stage:02d}-{name}.txt")
-        with open(path, "w") as f:
-            f.write(text + "\n")
+        for sink in self.dump_ir:
+            if sink in ("-", "stderr"):
+                print(f"// IR after {stage:02d}-{name}\n{text}",
+                      file=sys.stderr)
+                continue
+            os.makedirs(sink, exist_ok=True)
+            path = os.path.join(sink, f"{stage:02d}-{name}.txt")
+            with open(path, "w") as f:
+                f.write(text + "\n")
 
     def _verify(self, name: str, graph: Graph, want_outputs) -> None:
         try:

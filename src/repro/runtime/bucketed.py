@@ -58,10 +58,13 @@ class BucketedExecutable(Executable):
     # ------------------------------------------------------------------
     @property
     def compile_time(self):
+        """Inner executable's accumulated compile time (read-through)."""
         return self.inner.compile_time
 
     @compile_time.setter
-    def compile_time(self, value):   # Executable base class assigns it
+    def compile_time(self, value):
+        """No-op: the Executable base class assigns this attribute, but
+        the inner executable owns the real counter."""
         pass
 
     def prewarm_from_disk(self) -> int:
@@ -81,6 +84,7 @@ class BucketedExecutable(Executable):
         self._cache.warm_up(block=block)
 
     def wait_warm(self, timeout: float = 120.0) -> bool:
+        """Block until background warm-up finishes; False on timeout."""
         return self._cache.wait_warm(timeout)
 
     def ensure_compiled(self, batch_size: int = 1):
@@ -112,15 +116,19 @@ class BucketedExecutable(Executable):
 
     # ------------------------------------------------------------------
     def cost_summary(self):
+        """Inner compile facts plus a ``runtime`` section (bucket policy
+        + engine-cache counters)."""
         out = self.inner.cost_summary()
         out["runtime"] = {"policy": self.policy.to_dict(),
                           **self._cache.stats()}
         return out
 
     def cache_info(self) -> dict:
+        """Disk-cache counters of the wrapped executable."""
         return self.inner.cache_info()
 
     def runtime_stats(self) -> dict:
+        """Engine-cache counters: hits, misses, stalls, pad waste."""
         return self._cache.stats()
 
     def serialize(self) -> bytes:
@@ -140,6 +148,7 @@ class BucketedExecutable(Executable):
                            "artifacts": artifacts})
 
     def shutdown(self) -> None:
+        """Stop the background warm-up worker (idempotent)."""
         self._cache.shutdown()
 
     def __repr__(self) -> str:

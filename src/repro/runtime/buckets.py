@@ -152,10 +152,12 @@ class BucketPolicy:
 
     # ------------------------------------------------------------------
     def to_dict(self) -> dict:
+        """JSON-friendly form; invert with ``from_dict``."""
         return {"batch_buckets": list(self.batch_buckets),
                 "len_buckets": list(self.len_buckets)}
 
     @classmethod
     def from_dict(cls, d: dict) -> "BucketPolicy":
+        """Rebuild a policy from ``to_dict`` output."""
         return cls(batch_buckets=tuple(d.get("batch_buckets") or ()),
                    len_buckets=tuple(d.get("len_buckets") or ()))

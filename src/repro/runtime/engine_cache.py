@@ -147,6 +147,7 @@ class EngineCache:
         return False
 
     def shutdown(self) -> None:
+        """Stop accepting work and join the warm-up thread (idempotent)."""
         with self._lock:
             self._closed = True
         if self._thread is not None and self._thread.is_alive():
@@ -283,17 +284,21 @@ class EngineCache:
         return (b.batch, b.length or 0)
 
     def warm_buckets(self) -> Tuple[Bucket, ...]:
+        """Buckets whose programs are compiled and resident, sorted."""
         with self._lock:
             return tuple(sorted(self._entries, key=self._order))
 
     @property
     def pad_waste_frac(self) -> float:
+        """Fraction of served elements that were bucket padding."""
         with self._lock:
             if self._total_elems == 0:
                 return 0.0
             return self._pad_elems / self._total_elems
 
     def stats(self) -> dict:
+        """Serving counters: bucket hits/misses, stalls, background
+        compiles, compile time, warm set, and padding waste."""
         with self._lock:
             total = self._total_elems
             return {
