@@ -1,8 +1,9 @@
 #!/usr/bin/env python3
 """Docstring coverage gate (stdlib-only; CI: docs-gates job).
 
-Walks ``src/repro/api``, ``src/repro/autotune``, ``src/repro/runtime``
-and ``src/repro/replay`` with the ``ast`` module, counts docstrings on
+Walks ``src/repro/api``, ``src/repro/autotune``, ``src/repro/runtime``,
+``src/repro/replay`` and ``src/repro/serve`` with the ``ast`` module,
+counts docstrings on
 modules, public classes and public functions/methods (names not starting
 with ``_``, plus ``__init__`` is exempt), and fails if coverage drops
 below the recorded floor.
@@ -27,7 +28,7 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 #: Packages whose public surface must be documented.
 PACKAGES = ("src/repro/api", "src/repro/autotune", "src/repro/runtime",
-            "src/repro/replay")
+            "src/repro/replay", "src/repro/serve")
 
 #: Minimum fraction of public objects with docstrings.  Ratchet only
 #: upward.  Recorded at 1.00 in PR 7 (every public object documented);

@@ -28,7 +28,17 @@ def main(argv=None) -> int:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--admission", default="fcfs",
-                    choices=("fcfs", "shortest"))
+                    choices=("fcfs", "shortest", "deadline"))
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="first-token SLO (ms) attached to every synthetic "
+                         "request; summary() then reports slo_violations")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked prefill: prompts advance this many "
+                         "tokens per step, interleaved with decodes "
+                         "(must divide --max-len)")
+    ap.add_argument("--prefix-cache", type=int, default=0,
+                    help="shared prompt-head KV snapshots to keep "
+                         "(requires --prefill-chunk); 0 = off")
     ap.add_argument("--no-fold", action="store_true")
     ap.add_argument("--buckets", action="store_true", default=None,
                     help="shape-polymorphic serving: decode at the best "
@@ -55,13 +65,16 @@ def main(argv=None) -> int:
     exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
     sched = repro.serve(exe, repro.SchedulerOptions(
         slots=args.slots, max_len=args.max_len, admission=args.admission,
-        fold=not args.no_fold, buckets=policy))
+        fold=not args.no_fold, buckets=policy,
+        prefill_chunk=args.prefill_chunk,
+        prefix_cache=args.prefix_cache))
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         plen = int(rng.integers(4, 17))
         sched.submit(Request(uid=i,
                              prompt=rng.integers(0, cfg.vocab, plen),
-                             max_new_tokens=args.max_new))
+                             max_new_tokens=args.max_new,
+                             slo_ms=args.slo_ms))
     t_build = time.perf_counter() - t0
     # progress goes to stderr so that --json leaves stdout parseable
     print(f"[serve] scheduler up in {t_build:.2f}s "

@@ -88,6 +88,28 @@ class Model:
     def decode_step(self, params, cache, tokens):
         return self.mod.decode_step(self.cfg, params, cache, tokens)
 
+    def supports_chunked_prefill(self) -> bool:
+        """True when the family implements incremental ``prefill_chunk``.
+
+        Transformer-family models (dense/moe) qualify unless they use an
+        MLA latent cache or need extra prefill inputs (vlm patches,
+        audio frames).  Callers must additionally check that the cache
+        is full-context (not a ring) — see ``repro.serve``.
+        """
+        if not hasattr(self.mod, "prefill_chunk"):
+            return False
+        if self.cfg.mla:
+            return False
+        if self.cfg.family in ("vlm", "audio"):
+            return False
+        return True
+
+    def prefill_chunk(self, params, tokens, cache, start, length):
+        """Prefill one fixed-size chunk of a prompt at absolute offset
+        ``start`` (see ``transformer.prefill_chunk``)."""
+        return self.mod.prefill_chunk(self.cfg, params, tokens, cache,
+                                      start, length)
+
 
 def get_model(cfg: ArchConfig) -> Model:
     if cfg.family not in _FAMILY_MODULES:

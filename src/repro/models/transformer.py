@@ -364,6 +364,84 @@ def prefill(cfg, params, tokens, cache, patches=None):
     return _head(cfg, params, x[:, -1:]), cache
 
 
+def attn_chunk(p, cfg, x, k_cache, v_cache, positions, window, start):
+    """Prefill one chunk against an existing cache: write the chunk's
+    K/V into rows ``[start, start+C)`` and attend the chunk's queries
+    over the cache prefix plus the chunk itself (``q_offset`` keeps the
+    causal/window masks absolute).  Rows the chunk's pad positions
+    write are causally invisible to every real query and are
+    overwritten (or masked by ``pos``) before decode can see them."""
+    b, c, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        k_cache, k.astype(k_cache.dtype), start, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        v_cache, v.astype(v_cache.dtype), start, axis=1)
+    out = C.chunked_attention(
+        q, k_cache, v_cache, causal=True, window_arr=window,
+        q_offset=start,
+        q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk,
+        softcap=cfg.attn_softcap, scale=cfg.attn_scale,
+        compute_dtype=cfg.attn_compute_dtype,
+        causal_skip=cfg.causal_skip)
+    out = out.reshape(b, c, cfg.n_heads * cfg.head_dim)
+    y = C.row_parallel_out(out, p["wo"], cfg.tp_psum)
+    return logical(y, "batch", "seq", "embed"), (k_cache, v_cache)
+
+
+def layer_chunk(p, cfg, x, c1, c2, positions, window, start):
+    """One decoder layer over a prefill chunk (the chunk twin of
+    ``layer_apply``/``layer_decode``)."""
+    h, (c1, c2) = attn_chunk(p["attn"], cfg,
+                             C.rms_norm(x, p["ln1"], cfg.norm_eps),
+                             c1, c2, positions, window, start)
+    x = x + h
+    h, _ = _ffn(p["ffn"], cfg, C.rms_norm(x, p["ln2"], cfg.norm_eps))
+    return x + h, c1, c2
+
+
+def prefill_chunk(cfg, params, tokens, cache, start, length):
+    """Incremental prefill: process ``length`` (≤ C) prompt tokens at
+    absolute positions ``[start, start+length)`` against an existing
+    cache.
+
+    ``tokens`` is a fixed-size (B, C) chunk (pad beyond ``length``);
+    ``start``/``length`` are traced, so ONE compiled program serves
+    every chunk of every prompt.  Returns the logits of the last *real*
+    token and the updated cache (``pos = start+length``) — both
+    bit-identical to the corresponding positions of one full-sequence
+    ``prefill`` (tested), because the chunk queries see exactly the
+    same keys in the same order: the cache prefix holds the earlier
+    chunks' K/V at their absolute rows and ``q_offset`` keeps the
+    causal/window masks absolute.
+
+    Requires a full-context cache (``cache_len == max_len``): with a
+    ring cache the chunk's absolute row indices would alias, so callers
+    gate chunked prefill off for all-sliding-window models (the
+    scheduler does).  MLA caches store latents, not K/V, and are not
+    supported — ``repro.serve`` falls back to whole-prompt prefill.
+    """
+    if cfg.mla:
+        raise NotImplementedError(
+            "chunked prefill is not supported for MLA caches")
+    b, c = tokens.shape
+    x = _embed_in(cfg, params, tokens)
+    positions = start + jnp.arange(c)[None, :]
+    windows = jnp.asarray(layer_windows(cfg))
+
+    def body(x, xs):
+        lp, w, c1, c2 = xs
+        x, c1, c2 = layer_chunk(lp, cfg, x, c1, c2, positions, w, start)
+        return x, (c1, c2)
+
+    x, (c1s, c2s) = jax.lax.scan(
+        body, x, (params["layers"], windows, cache["c1"], cache["c2"]))
+    new_cache = {"c1": c1s, "c2": c2s,
+                 "pos": jnp.full_like(cache["pos"], start + length)}
+    last = jax.lax.dynamic_slice_in_dim(x, length - 1, 1, axis=1)
+    return _head(cfg, params, last), new_cache
+
+
 def decode_step(cfg, params, cache, tokens):
     """One decode step: tokens (B,1) -> (logits (B,1,V), updated cache)."""
     x = _embed_in(cfg, params, tokens)

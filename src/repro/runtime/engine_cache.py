@@ -296,6 +296,20 @@ class EngineCache:
                 return 0.0
             return self._pad_elems / self._total_elems
 
+    def reset_counters(self) -> None:
+        """Zero the dispatch/compile counters (warm entries are kept).
+        Benchmarks call this between a warm-up wave and the measured
+        steady-state wave so ``stats()`` reflects only the latter."""
+        with self._lock:
+            self.bucket_hits = 0
+            self.bucket_misses = 0
+            self.background_compiles = 0
+            self.compile_stalls = 0
+            self.fallback_serves = 0
+            self.compile_ms = 0.0
+            self._pad_elems = 0
+            self._total_elems = 0
+
     def stats(self) -> dict:
         """Serving counters: bucket hits/misses, stalls, background
         compiles, compile time, warm set, and padding waste."""

@@ -24,6 +24,7 @@ import types as _types
 
 from .metrics import RequestMetrics, SchedulerMetrics
 from .options import ADMISSION_POLICIES, SchedulerOptions
+from .prefix import PrefixCache
 from .scheduler import (Completion, QueueFullError, Request, Scheduler,
                         TemperatureSampler)
 from .slots import SlotManager, SlotState
@@ -31,6 +32,7 @@ from .slots import SlotManager, SlotState
 __all__ = [
     "ADMISSION_POLICIES",
     "Completion",
+    "PrefixCache",
     "QueueFullError",
     "Request",
     "RequestMetrics",

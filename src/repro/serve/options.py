@@ -12,7 +12,7 @@ from typing import Optional
 
 from ..runtime.buckets import BucketPolicy
 
-ADMISSION_POLICIES = ("fcfs", "shortest")
+ADMISSION_POLICIES = ("fcfs", "shortest", "deadline")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -26,8 +26,13 @@ class SchedulerOptions:
                   alone exceeds it is rejected at submit; ``max_new_tokens``
                   is clamped so the cache can never overflow.
     admission:    queue discipline used when a slot frees up —
-                  ``"fcfs"`` (arrival order) or ``"shortest"`` (shortest
-                  prompt first, minimizes mean TTFT under bursty load).
+                  ``"fcfs"`` (arrival order), ``"shortest"`` (shortest
+                  prompt first, minimizes mean TTFT under bursty load)
+                  or ``"deadline"`` (earliest-deadline-first over each
+                  request's ``slo_ms``; requests without an SLO sort
+                  after every deadline, FCFS among themselves — the
+                  policy that minimizes ``slo_violations`` under a
+                  mixed interactive/batch trace).
     max_queue:    admission control: ``submit`` raises
                   :class:`QueueFullError` once this many requests are
                   waiting.  ``None`` = unbounded.
@@ -43,6 +48,28 @@ class SchedulerOptions:
                   worker.  Buckets are clipped to ``slots``/``max_len``.
                   ``None`` (default) = fixed-shape serving, bit-identical
                   to the pre-bucketing scheduler.
+    prefill_chunk: chunk size (tokens) for incremental prefill.  Long
+                  prompts are prefilled ``prefill_chunk`` tokens per
+                  scheduler step, interleaved with decode steps, so a
+                  long prompt never blocks in-flight decodes (tokens
+                  stay bit-identical — see ``models.prefill_chunk``).
+                  Must divide ``max_len``.  ``None`` (default) =
+                  whole-prompt prefill at admission.  Auto-disabled
+                  (surfaced in ``summary()["chunked_prefill"]``) for
+                  model families without incremental prefill: MLA
+                  latent caches, vlm/audio extra inputs, ring caches.
+    prefix_cache: capacity (entries) of the shared-prompt-head KV
+                  cache.  When > 0, requests whose prompts share a
+                  common head (the "system prompt" scenario) prefill
+                  that head ONCE: the head's KV rows are snapshotted at
+                  a chunk boundary and later requests splice a copy and
+                  prefill only their tail (copy-on-write — the shared
+                  snapshot is never mutated).  Requires
+                  ``prefill_chunk``.  ``0`` (default) = off.
+    min_prefix:   minimum shared-head length (tokens) worth caching;
+                  the effective floor is ``max(min_prefix,
+                  prefill_chunk)`` since snapshots land on chunk
+                  boundaries.
     """
 
     slots: int = 4
@@ -52,6 +79,9 @@ class SchedulerOptions:
     fold: bool = True
     seed: int = 0
     buckets: Optional[BucketPolicy] = None
+    prefill_chunk: Optional[int] = None
+    prefix_cache: int = 0
+    min_prefix: int = 0
 
     def __post_init__(self) -> None:
         if self.slots <= 0:
@@ -72,9 +102,30 @@ class SchedulerOptions:
             raise ValueError(
                 f"buckets must be a repro.runtime.BucketPolicy or None, "
                 f"got {type(self.buckets).__name__}")
+        if self.prefill_chunk is not None:
+            if self.prefill_chunk <= 0:
+                raise ValueError(f"prefill_chunk must be positive or "
+                                 f"None, got {self.prefill_chunk}")
+            if self.max_len % self.prefill_chunk != 0:
+                raise ValueError(
+                    f"prefill_chunk ({self.prefill_chunk}) must divide "
+                    f"max_len ({self.max_len})")
+        if self.prefix_cache < 0:
+            raise ValueError(f"prefix_cache must be >= 0, "
+                             f"got {self.prefix_cache}")
+        if self.prefix_cache > 0 and self.prefill_chunk is None:
+            raise ValueError(
+                "prefix_cache requires prefill_chunk: shared heads are "
+                "snapshotted at chunk boundaries and tails are "
+                "prefilled incrementally")
+        if self.min_prefix < 0:
+            raise ValueError(f"min_prefix must be >= 0, "
+                             f"got {self.min_prefix}")
 
     def replace(self, **kw) -> "SchedulerOptions":
+        """Copy with the given fields replaced (re-validates)."""
         return dataclasses.replace(self, **kw)
 
     def to_dict(self) -> dict:
+        """Plain-dict view of every option field."""
         return dataclasses.asdict(self)

@@ -2,24 +2,34 @@
 
 The step loop rebatches every decode step:
 
-    1. admit — while a slot is free and requests wait, pick one (FCFS or
-       shortest-prompt), prefill it at its exact prompt length (runtime
-       specialization; repeated lengths hit jit's trace cache), splice
-       its cache row into the batched cache and sample its first token;
-    2. decode — ONE batched decode step advances every active slot (the
-       program is specialized for the fixed slot count; the cache is
-       donated, the framework-scale version of the paper's in-place
-       memory planning);
+    1. admit — while capacity is free and requests wait, pick one (FCFS,
+       shortest-prompt, or earliest-deadline), prefill it — whole-prompt
+       at admission, or one ``prefill_chunk`` per step interleaved with
+       decode so long prompts never block in-flight decodes — splice its
+       cache row into the batched cache and sample its first token;
+    2. decode — ONE batched decode step advances every active slot.
+       Every per-bucket decode program takes the FULL batched cache with
+       ``donate_argnums``: the KV write-back happens inside the compiled
+       program on the donated buffer, so steady-state decode performs no
+       new device allocations (the framework-scale version of the
+       paper's in-place memory planning);
     3. sample + evict — per-slot sampling, EOS / length retirement frees
        slots for the next iteration's admissions.
+
+Requests whose prompts share a common head (the "system prompt"
+scenario) prefill that head once: with ``prefix_cache`` enabled the
+scheduler snapshots the head's KV rows at a chunk boundary and later
+requests splice a copy, prefilling only their tail — bit-identical to
+unshared prefill (see :mod:`repro.serve.prefix`).
 
 ``submit`` is thread-safe and non-blocking, so a producer can feed the
 queue while another thread (or an asyncio executor) drives ``step`` /
 ``run`` — the scheduler itself never blocks waiting for requests.
 
-Per-request metrics (TTFT, decode tok/s, queue depth at submit) and
-aggregate counters (batch occupancy, total throughput) come from an
-injected clock, so tests assert exact numbers.
+Per-request metrics (TTFT, decode tok/s, queue depth at submit,
+deadline/SLO outcome) and aggregate counters (batch occupancy, total
+throughput, ``slo_violations``) come from an injected clock, so tests
+assert exact numbers.
 """
 
 from __future__ import annotations
@@ -35,11 +45,15 @@ import numpy as np
 
 from .metrics import RequestMetrics, SchedulerMetrics
 from .options import SchedulerOptions
+from .prefix import PrefixCache, common_prefix_len
 from .slots import SlotManager, SlotState
 
 
 @dataclasses.dataclass
 class Request:
+    """One generation request: prompt tokens, budget, sampling knobs,
+    optional extra model inputs and an optional first-token SLO."""
+
     uid: int
     prompt: np.ndarray            # (s,) int32
     max_new_tokens: int = 32
@@ -51,10 +65,33 @@ class Request:
     #: (of 1) or omit it.  Missing extras are zero-filled; names the
     #: model does not declare are rejected at ``submit``.
     inputs: Optional[Dict[str, np.ndarray]] = None
+    #: First-token SLO in milliseconds (relative to submit).  Sets the
+    #: request's absolute deadline on the scheduler clock; the
+    #: ``"deadline"`` admission policy schedules earliest-deadline-first
+    #: and ``summary()`` counts ``slo_violations``.  None = no SLO.
+    slo_ms: Optional[float] = None
+
+
+@dataclasses.dataclass
+class _PrefillTask:
+    """One in-flight chunked prefill: a request whose prompt is being
+    fed through the chunk program ``prefill_chunk`` tokens per step.
+    Counts against slot capacity so a free slot is guaranteed when the
+    final chunk lands and the task activates."""
+
+    req: Request
+    prompt: np.ndarray                    # (plen,) int32
+    cache: Any                            # single-row cache, filled in place
+    offset: int = 0                       # tokens prefilled so far
+    logits: Any = None                    # last-token logits, latest chunk
+    snapshot_at: Optional[int] = None     # chunk boundary to snapshot
+    snapshot_key: Optional[bytes] = None  # pending PrefixCache key
 
 
 @dataclasses.dataclass
 class Completion:
+    """Finished request: generated tokens and why generation stopped."""
+
     uid: int
     tokens: List[int]
     finish_reason: str = "length"   # "eos" | "length"
@@ -125,6 +162,12 @@ class Scheduler:
         # bucket, background compiles.  None = fixed-shape (PR-5) path.
         self._decode_engine = None
         self._prefill_engine = None
+        # chunked prefill + shared-prefix snapshots (both optional)
+        self._chunk_engine = None
+        self._prefix_cache: Optional[PrefixCache] = None
+        self._prefilling: List[_PrefillTask] = []
+        if options.prefill_chunk is not None:
+            self._init_chunking(engine_worker)
         if options.buckets is not None:
             self._init_bucketing(engine_worker)
 
@@ -155,17 +198,33 @@ class Scheduler:
                   and isinstance(cache_spec, dict) and "pos" in cache_spec
                   and self._cache_grows_with_max_len())
 
+        full_spec = jax.eval_shape(
+            lambda: self.model.init_cache(opts.slots, opts.max_len))
+        tok_spec = jax.ShapeDtypeStruct((opts.slots, 1), jnp.int32)
+
         def build_decode(bucket):
+            # EVERY bucket's program takes (and donates) the FULL
+            # batched cache: the row slice, the decode step and the KV
+            # write-back all happen inside one compiled program, so the
+            # donated buffer is updated in place — no per-step slice /
+            # write-back allocations at the JAX level (the pre-allocated
+            # step-buffer discipline of the paper's memory planner).
             b = bucket.batch
-            c_spec = jax.eval_shape(
-                lambda: self.model.init_cache(b, opts.max_len))
-            t_spec = jax.ShapeDtypeStruct((b, 1), jnp.int32)
-            # only the full-slots program may donate: the sliced path
-            # still needs the sub-cache for the write-back
-            donate = (1,) if b == opts.slots else ()
-            fn = jax.jit(lambda p, c, t: self.model.decode_step(p, c, t),
-                         donate_argnums=donate)
-            return fn.lower(params_spec, c_spec, t_spec).compile()
+
+            def step(p, c, t):
+                if b >= opts.slots:
+                    return self.model.decode_step(p, c, t)
+                sub = jax.tree.map(
+                    lambda l: l[:b] if l.ndim == 1 else l[:, :b], c)
+                logits, sub = self.model.decode_step(p, sub, t[:b])
+                axis = lambda l: 0 if l.ndim == 1 else 1
+                new_c = jax.tree.map(
+                    lambda f, s: jax.lax.dynamic_update_slice_in_dim(
+                        f, s, 0, axis=axis(f)), c, sub)
+                return logits, new_c
+
+            fn = jax.jit(step, donate_argnums=(1,))
+            return fn.lower(params_spec, full_spec, tok_spec).compile()
 
         self._decode_engine = EngineCache(
             BucketPolicy(batch_buckets=policy.batch_buckets),
@@ -176,7 +235,9 @@ class Scheduler:
         self._decode_engine.warm_up([Bucket(opts.slots)], block=True)
         self._decode_engine.warm_up(block=False)
 
-        if not len_ok:
+        # chunked prefill supersedes padded whole-prompt prefill: every
+        # prompt runs through the (single-bucket) chunk program instead
+        if not len_ok or self._chunk_engine is not None:
             return
 
         def build_prefill(bucket):
@@ -199,6 +260,50 @@ class Scheduler:
         self._prefill_engine.warm_up(
             tuple(reversed(self._prefill_engine.policy.enumerate_buckets())))
 
+    def _init_chunking(self, worker: str) -> None:
+        """Build the chunk-prefill program — one PR-6 length bucket of
+        exactly ``prefill_chunk`` tokens, compiled synchronously at
+        construction so the request path never stalls on it — plus the
+        optional shared-prefix snapshot cache.
+
+        Families without incremental prefill keep whole-prompt prefill
+        silently (MLA latent caches, vlm/audio extra inputs, ring
+        caches whose capacity is the window, not ``max_len``) —
+        surfaced in ``summary()["chunked_prefill"]["enabled"]``.
+        """
+        from ..runtime.buckets import BucketPolicy
+        from ..runtime.engine_cache import EngineCache
+        opts = self.options
+        supports = getattr(self.model, "supports_chunked_prefill", None)
+        cache_spec = jax.eval_shape(
+            lambda: self.model.init_cache(1, opts.max_len))
+        if not (supports is not None and supports()
+                and isinstance(cache_spec, dict) and "pos" in cache_spec
+                and self._cache_grows_with_max_len()):
+            return
+        params_spec = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.params)
+
+        def build_chunk(bucket):
+            t_spec = jax.ShapeDtypeStruct((1, bucket.length), jnp.int32)
+            s_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            # the single-row cache is donated: each chunk fills it in
+            # place (PrefixCache copies before/after, never aliases it)
+            fn = jax.jit(
+                lambda p, t, c, s, n: self.model.prefill_chunk(
+                    p, t, c, s, n),
+                donate_argnums=(2,))
+            return fn.lower(params_spec, t_spec, cache_spec,
+                            s_spec, s_spec).compile()
+
+        self._chunk_engine = EngineCache(
+            BucketPolicy(batch_buckets=(1,),
+                         len_buckets=(opts.prefill_chunk,)),
+            build_chunk, worker=worker, clock=self.clock)
+        self._chunk_engine.warm_up(block=True)
+        if opts.prefix_cache > 0:
+            self._prefix_cache = PrefixCache(opts.prefix_cache)
+
     def _prefill_fixup(self, p, batch, cache, length):
         """Prefill padded to the bucket, then recover the exact-length
         result: the pad positions' K/V entries are causally downstream
@@ -218,7 +323,8 @@ class Scheduler:
         """Block until every scheduled background compile has landed
         (True) or the timeout expires.  No-op without bucketing."""
         ok = True
-        for eng in (self._decode_engine, self._prefill_engine):
+        for eng in (self._decode_engine, self._prefill_engine,
+                    self._chunk_engine):
             if eng is not None:
                 ok = eng.wait_warm(timeout) and ok
         return ok
@@ -226,7 +332,8 @@ class Scheduler:
     def shutdown(self) -> None:
         """Stop the background compile workers (daemon threads — safe
         to skip, but tests join them for determinism)."""
-        for eng in (self._decode_engine, self._prefill_engine):
+        for eng in (self._decode_engine, self._prefill_engine,
+                    self._chunk_engine):
             if eng is not None:
                 eng.shutdown()
 
@@ -279,25 +386,58 @@ class Scheduler:
             m = RequestMetrics(uid=req.uid, prompt_tokens=plen,
                                submitted_at=self.clock(),
                                queue_depth_at_submit=depth)
+            if req.slo_ms is not None:
+                m.deadline = m.submitted_at + req.slo_ms / 1e3
             self.request_metrics[req.uid] = m
             return m
 
     def queue_depth(self) -> int:
+        """Requests waiting for admission (thread-safe snapshot)."""
         with self._lock:
             return len(self._queue)
 
     def num_active(self) -> int:
+        """Slots currently generating."""
         return self.slot_manager.num_active()
+
+    def _blocked(self, req: Request) -> bool:
+        """True while an in-flight prefill is about to snapshot a head
+        this request's prompt starts with: admitting it NOW would
+        re-prefill the shared head; waiting the few steps until the
+        snapshot lands turns it into a prefix hit."""
+        if self._prefix_cache is None:
+            return False
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        for t in self._prefilling:
+            h = t.snapshot_at
+            if (t.snapshot_key is not None and h is not None
+                    and h < len(prompt)
+                    and prompt[:h].tobytes() == t.snapshot_key):
+                return True
+        return False
 
     def _pop_next(self) -> Optional[Request]:
         with self._lock:
             if not self._queue:
                 return None
+            cand = range(len(self._queue))
+            if self._prefix_cache is not None and self._prefilling:
+                cand = [j for j in cand
+                        if not self._blocked(self._queue[j])]
+                if not cand:
+                    return None    # every waiter gains by waiting
             if self.options.admission == "shortest":
-                i = min(range(len(self._queue)),
+                i = min(cand,
                         key=lambda j: (len(self._queue[j].prompt), j))
+            elif self.options.admission == "deadline":
+                # earliest deadline first; no-SLO requests after every
+                # deadline, FCFS among themselves
+                def urgency(j):
+                    d = self.request_metrics[self._queue[j].uid].deadline
+                    return (0, d, j) if d is not None else (1, 0.0, j)
+                i = min(cand, key=urgency)
             else:                                   # fcfs
-                i = 0
+                i = next(iter(cand))
             return self._queue.pop(i)
 
     # -- admission -----------------------------------------------------
@@ -325,6 +465,9 @@ class Scheduler:
         return batch
 
     def _admit_free_slots(self) -> None:
+        if self._chunk_engine is not None:
+            self._admit_chunked()
+            return
         for slot in self.slot_manager.free_slots():
             req = self._pop_next()
             if req is None:
@@ -349,24 +492,117 @@ class Scheduler:
                 logits, one = self._prefill(
                     self.params, self._prefill_batch(prompt, req.inputs),
                     one)
-            tok = self.sampler(logits[:, -1], req.temperature,
-                               uid=req.uid, index=0)
+            self._activate(slot, req, logits[:, -1], one)
 
-            # clamp so prompt + generated tokens can never outrun the
-            # per-slot cache capacity
-            budget = self.options.max_len - prompt.shape[1]
-            self.slot_manager.admit(slot, SlotState(
-                uid=req.uid,
-                remaining=min(req.max_new_tokens, budget) - 1,
-                eos_id=req.eos_id,
-                temperature=req.temperature), one)
-            self.last_token[slot, 0] = tok
-            self.generated[req.uid] = [tok]
-            m.first_token_at = self.clock()
-            m.new_tokens = 1
-            self.metrics.total_new_tokens += 1
-            if tok == req.eos_id or min(req.max_new_tokens, budget) <= 1:
-                self._retire(slot, "eos" if tok == req.eos_id else "length")
+    def _admit_chunked(self) -> None:
+        """Chunked admission: a popped request becomes a
+        :class:`_PrefillTask` (advanced one chunk per step) instead of
+        being prefilled inline.  Tasks count against slot capacity so a
+        slot is free when each one completes; shared heads are taken
+        from / planned into the prefix cache here."""
+        opts = self.options
+        while (len(self._prefilling) + self.slot_manager.num_active()
+               < opts.slots):
+            req = self._pop_next()
+            if req is None:
+                return
+            m = self.request_metrics[req.uid]
+            m.admitted_at = self.clock()
+            self.metrics.admitted += 1
+            if self.metrics.started_at is None:
+                self.metrics.started_at = m.admitted_at
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            task = _PrefillTask(req=req, prompt=prompt, cache=None)
+            if self._prefix_cache is not None:
+                hit = self._prefix_cache.take(prompt)
+                if hit is not None:
+                    task.offset, task.cache = hit
+            if task.cache is None:
+                task.cache = self.model.init_cache(1, opts.max_len)
+                if self._prefix_cache is not None:
+                    self._plan_snapshot(task)
+            self._prefilling.append(task)
+
+    def _plan_snapshot(self, task: _PrefillTask) -> None:
+        """On a prefix miss: if waiting prompts share a head with this
+        one, mark the chunk boundary where this prefill should snapshot
+        it (the head is then prefilled ONCE; sharers block in the queue
+        until the snapshot lands and take a copy)."""
+        chunk = self.options.prefill_chunk
+        plen = len(task.prompt)
+        with self._lock:
+            queued = [np.asarray(r.prompt, np.int32).reshape(-1)
+                      for r in self._queue]
+        lcp = max((common_prefix_len(task.prompt, p) for p in queued),
+                  default=0)
+        head = (min(lcp, plen - 1) // chunk) * chunk
+        if head < max(chunk, self.options.min_prefix):
+            return
+        key = PrefixCache.key_for(task.prompt[:head])
+        if key in self._prefix_cache or any(
+                t.snapshot_key == key for t in self._prefilling):
+            return
+        task.snapshot_at = head
+        task.snapshot_key = key
+
+    def _advance_prefills(self) -> None:
+        """Advance every in-flight chunked prefill by ONE chunk — the
+        interleaving that keeps long prompts from blocking decodes —
+        then activate tasks whose prompt is complete."""
+        if not self._prefilling:
+            return
+        chunk_len = self.options.prefill_chunk
+        finished = []
+        for task in self._prefilling:
+            n = min(chunk_len, len(task.prompt) - task.offset)
+            chunk = np.zeros((1, chunk_len), np.int32)
+            chunk[0, :n] = task.prompt[task.offset:task.offset + n]
+            entry, _, _ = self._chunk_engine.get(1, n)
+            task.logits, task.cache = entry(
+                self.params, jnp.asarray(chunk), task.cache,
+                jnp.int32(task.offset), jnp.int32(n))
+            task.offset += n
+            self.metrics.prefill_chunks += 1
+            if (task.snapshot_key is not None
+                    and task.offset == task.snapshot_at):
+                self._prefix_cache.insert(task.snapshot_key, task.offset,
+                                          task.cache)
+                task.snapshot_key = None
+                task.snapshot_at = None
+            if task.offset >= len(task.prompt):
+                finished.append(task)
+        for task in finished:
+            self._prefilling.remove(task)
+            slot = self.slot_manager.free_slots()[0]
+            self._activate(slot, task.req, task.logits[:, 0], task.cache)
+
+    def _activate(self, slot: int, req: Request, logits: jnp.ndarray,
+                  one_cache: Any) -> None:
+        """Prefill is done: sample the first token from its (1, vocab)
+        logits, splice the single-row cache into ``slot`` and record
+        first-token metrics (including the SLO verdict)."""
+        tok = self.sampler(logits, req.temperature, uid=req.uid, index=0)
+        # clamp so prompt + generated tokens can never outrun the
+        # per-slot cache capacity
+        plen = int(np.asarray(req.prompt).shape[-1])
+        budget = self.options.max_len - plen
+        self.slot_manager.admit(slot, SlotState(
+            uid=req.uid,
+            remaining=min(req.max_new_tokens, budget) - 1,
+            eos_id=req.eos_id,
+            temperature=req.temperature), one_cache)
+        self.last_token[slot, 0] = tok
+        self.generated[req.uid] = [tok]
+        m = self.request_metrics[req.uid]
+        m.first_token_at = self.clock()
+        m.new_tokens = 1
+        self.metrics.total_new_tokens += 1
+        if m.deadline is not None:
+            m.slo_violated = bool(m.first_token_at > m.deadline)
+            if m.slo_violated:
+                self.metrics.slo_violations += 1
+        if tok == req.eos_id or min(req.max_new_tokens, budget) <= 1:
+            self._retire(slot, "eos" if tok == req.eos_id else "length")
 
     # -- retirement ----------------------------------------------------
     def _retire(self, slot: int, reason: str) -> None:
@@ -383,27 +619,18 @@ class Scheduler:
     # -- bucketed decode -----------------------------------------------
     def _bucketed_decode(self, k: int) -> jnp.ndarray:
         """One decode step at the best warm batch bucket for ``k``
-        active slots.  Compacts actives into rows ``[0, k)``, slices
-        those rows out of the batched cache, runs the bucket's program
-        and writes the rows back — bit-identical per row to decoding at
-        the full slot count, minus the work for the empty rows."""
+        active slots.  Compacts actives into rows ``[0, k)`` and runs
+        the bucket's program over the FULL donated cache — the row
+        slice and KV write-back happen inside the compiled program, so
+        the cache buffer is reused in place every step (bit-identical
+        per row to decoding at the full slot count, minus the work for
+        the empty rows; returned logits cover the bucket's rows)."""
         for src, dst in self.slot_manager.compact():
             self.last_token[dst, 0] = self.last_token[src, 0]
-        entry, bucket, _ = self._decode_engine.get(k)
-        b = bucket.batch
-        cache = self.slot_manager.cache
-        if b >= self.options.slots:
-            # full-slots program: today's donated in-place path
-            logits, self.slot_manager.cache = entry(
-                self.params, cache, jnp.asarray(self.last_token))
-            return logits[:, 0]
-        sub = jax.tree.map(
-            lambda l: l[:b] if l.ndim == 1 else l[:, :b], cache)
-        logits, sub = entry(self.params, sub,
-                            jnp.asarray(self.last_token[:b]))
-        self.slot_manager.cache = jax.tree.map(
-            lambda f, s: (f.at[:b].set(s) if f.ndim == 1
-                          else f.at[:, :b].set(s)), cache, sub)
+        entry, _, _ = self._decode_engine.get(k)
+        logits, self.slot_manager.cache = entry(
+            self.params, self.slot_manager.cache,
+            jnp.asarray(self.last_token))
         return logits[:, 0]
 
     # -- the step loop -------------------------------------------------
@@ -412,6 +639,7 @@ class Scheduler:
         decode step, sample + evict.  Returns the number of slots still
         active afterwards."""
         self._admit_free_slots()
+        self._advance_prefills()    # no-op unless chunked prefill is on
         active = self.slot_manager.active_slots()
         if not active:
             return 0
@@ -445,7 +673,8 @@ class Scheduler:
     def run(self, max_steps: int = 10_000) -> List[Completion]:
         """Drain the queue; returns all completions in finish order."""
         steps = 0
-        while ((self.queue_depth() or self.slot_manager.num_active())
+        while ((self.queue_depth() or self.slot_manager.num_active()
+                or self._prefilling)
                and steps < max_steps):
             self.step()
             steps += 1
@@ -472,11 +701,18 @@ class Scheduler:
 
     # -- reporting -----------------------------------------------------
     def summary(self) -> dict:
-        out = self.metrics.summary(self.request_metrics)
+        """Aggregate metrics: counters and TTFT/queue percentiles, plus
+        runtime engine stats, chunked-prefill and prefix-cache sections
+        when those features are active."""
+        engines = {}
         if self._decode_engine is not None:
-            engines = {"decode": self._decode_engine.stats()}
-            if self._prefill_engine is not None:
-                engines["prefill"] = self._prefill_engine.stats()
+            engines["decode"] = self._decode_engine.stats()
+        if self._prefill_engine is not None:
+            engines["prefill"] = self._prefill_engine.stats()
+        if self._chunk_engine is not None:
+            engines["chunk"] = self._chunk_engine.stats()
+        out = self.metrics.summary(self.request_metrics)
+        if engines:
             rt = {k: sum(e[k] for e in engines.values())
                   for k in ("bucket_hits", "bucket_misses",
                             "fallback_serves", "background_compiles",
@@ -486,9 +722,17 @@ class Scheduler:
             rt["pad_waste_frac"] = (pad / total) if total else 0.0
             rt.update(engines)
             out["runtime"] = rt
+        if self.options.prefill_chunk is not None:
+            out["chunked_prefill"] = {
+                "enabled": self._chunk_engine is not None,
+                "chunk_len": self.options.prefill_chunk,
+            }
+        if self._prefix_cache is not None:
+            out["prefix_cache"] = self._prefix_cache.stats()
         return out
 
     # legacy Engine attribute surface, used by the deprecated shim
     @property
     def cache(self) -> Any:
+        """The batched KV cache (legacy ``Engine.cache`` surface)."""
         return self.slot_manager.cache

@@ -30,6 +30,9 @@ class SlotState:
 
 
 class SlotManager:
+    """Owns the batched KV cache and the per-slot request states:
+    admission writes one request's rows in, retirement frees them."""
+
     def __init__(self, model, slots: int, max_len: int) -> None:
         self.slots = slots
         self.max_len = max_len
@@ -64,16 +67,29 @@ class SlotManager:
         return jax.tree.map(mv, cache)
 
     # ------------------------------------------------------------------
+    def buffer_pointers(self) -> Tuple[int, ...]:
+        """The device buffer address of every cache leaf — the handle
+        zero-allocation tests use: across steady-state decode steps the
+        donated step program must leave every pointer unchanged (the
+        cache is updated in place, never reallocated)."""
+        return tuple(l.unsafe_buffer_pointer()
+                     for l in jax.tree.leaves(self.cache))
+
+    # ------------------------------------------------------------------
     def free_slots(self) -> List[int]:
+        """Indices of empty slots."""
         return [s for s, st in enumerate(self._states) if st is None]
 
     def active_slots(self) -> List[int]:
+        """Indices of occupied slots."""
         return [s for s, st in enumerate(self._states) if st is not None]
 
     def num_active(self) -> int:
+        """Number of occupied slots."""
         return sum(st is not None for st in self._states)
 
     def state(self, slot: int) -> Optional[SlotState]:
+        """The request state in ``slot`` (None when free)."""
         return self._states[slot]
 
     # ------------------------------------------------------------------

@@ -324,3 +324,263 @@ def test_pop_completions_purge_frees_state_and_uids(setup):
     sched.run()
     assert sched.metrics.completed == 2
     assert [c.uid for c in sched.pop_completions(purge=True)] == [0]
+
+
+# ------------------------------------------------- serve hot loop (PR 8)
+def test_hot_loop_options_validation():
+    with pytest.raises(ValueError, match="divide"):
+        SchedulerOptions(max_len=48, prefill_chunk=10)
+    with pytest.raises(ValueError, match="positive"):
+        SchedulerOptions(prefill_chunk=0)
+    with pytest.raises(ValueError, match="requires prefill_chunk"):
+        SchedulerOptions(prefix_cache=4)
+    with pytest.raises(ValueError, match="min_prefix"):
+        SchedulerOptions(min_prefix=-1)
+    # the new admission policy and the combined options are accepted
+    o = SchedulerOptions(max_len=64, admission="deadline",
+                         prefill_chunk=16, prefix_cache=4)
+    assert o.to_dict()["prefill_chunk"] == 16
+
+
+def test_chunked_prefill_model_bit_identity(setup):
+    """Incremental prefill_chunk over an existing cache reproduces the
+    full-sequence prefill EXACTLY: last-token logits and every written
+    cache row are bitwise equal (online-softmax masking makes the pad
+    positions contribute exact zeros)."""
+    cfg, m, params = setup
+    max_len, plen, chunk = 64, 37, 16
+    prompt = (np.arange(plen, dtype=np.int32) * 3 + 1) % cfg.vocab
+
+    logits_full, cache_full = jax.jit(
+        lambda p, t, c: m.prefill(p, {"tokens": t}, c))(
+        params, prompt[None], m.init_cache(1, max_len))
+
+    cache = m.init_cache(1, max_len)
+    step = jax.jit(lambda p, t, c, s, n: m.prefill_chunk(p, t, c, s, n))
+    off = 0
+    while off < plen:
+        n = min(chunk, plen - off)
+        padded = np.zeros((1, chunk), np.int32)
+        padded[0, :n] = prompt[off:off + n]
+        logits, cache = step(params, padded, cache,
+                             np.int32(off), np.int32(n))
+        off += n
+
+    np.testing.assert_array_equal(np.asarray(logits_full[:, -1]),
+                                  np.asarray(logits[:, 0]))
+    for k in ("c1", "c2"):
+        np.testing.assert_array_equal(
+            np.asarray(cache_full[k])[:, :, :plen],
+            np.asarray(cache[k])[:, :, :plen])
+    assert int(cache["pos"][0]) == plen
+
+
+def _mixed_requests(vocab, *, head=None, n=6, max_new=5):
+    """Deterministic mixed stream; with ``head`` every odd request's
+    prompt starts with it (the shared system prompt)."""
+    rng = np.random.default_rng(42)
+    reqs = []
+    for i in range(n):
+        tail = rng.integers(0, vocab, int(rng.integers(3, 12))).astype(
+            np.int32)
+        if head is not None and i % 2 == 1:
+            prompt = np.concatenate([head, tail])
+        else:
+            prompt = tail
+        reqs.append(Request(uid=i, prompt=prompt, max_new_tokens=max_new))
+    return reqs
+
+
+def _tokens(m, params, reqs, **opts):
+    sched = _sched(m, params, **opts)
+    for r in reqs:
+        sched.submit(r)
+    sched.run()
+    out = {c.uid: tuple(c.tokens) for c in sched.done}
+    summ = sched.summary()
+    sched.shutdown()
+    return out, summ
+
+
+def test_chunked_prefill_scheduler_tokens_identical(setup):
+    """Long prompts fed through chunked prefill (with and without batch
+    buckets) produce bit-identical token streams to the fixed-shape
+    whole-prompt scheduler."""
+    cfg, m, params = setup
+    head = (np.arange(20, dtype=np.int32) * 7 + 2) % cfg.vocab
+    reqs = _mixed_requests(cfg.vocab, head=head)
+
+    want, base_summ = _tokens(m, params, reqs, slots=3, max_len=64)
+    assert "runtime" not in base_summ and "chunked_prefill" not in base_summ
+
+    got, summ = _tokens(m, params, reqs, slots=3, max_len=64,
+                        prefill_chunk=8)
+    assert got == want
+    assert summ["chunked_prefill"] == {"enabled": True, "chunk_len": 8}
+    assert summ["prefill_chunks"] > len(reqs)   # long prompts = >1 chunk
+    assert summ["runtime"]["chunk"]["compile_stalls"] == 0
+
+    pol = repro.BucketPolicy.default(max_batch=3, max_len=64)
+    got_b, summ_b = _tokens(m, params, reqs, slots=3, max_len=64,
+                            prefill_chunk=8, buckets=pol)
+    assert got_b == want
+    # chunked prefill replaces the padded length-bucket prefill engine
+    assert "prefill" not in summ_b["runtime"]
+    assert "chunk" in summ_b["runtime"]
+
+
+def test_prefix_sharing_bit_identity_and_head_prefilled_once(setup):
+    """Requests sharing a prompt head: tokens stay bit-identical to the
+    unshared scheduler, the head is prefilled exactly ONCE (one insert;
+    every other sharer takes a snapshot copy), and the shared chunks
+    are actually skipped (fewer chunk dispatches than without the
+    cache)."""
+    cfg, m, params = setup
+    chunk = 8
+    head = (np.arange(2 * chunk, dtype=np.int32) * 5 + 3) % cfg.vocab
+    reqs = _mixed_requests(cfg.vocab, head=head)
+    n_shared = sum(1 for r in reqs if len(r.prompt) > len(head))
+
+    want, _ = _tokens(m, params, reqs, slots=3, max_len=64)
+    plain, plain_summ = _tokens(m, params, reqs, slots=3, max_len=64,
+                                prefill_chunk=chunk)
+    shared, summ = _tokens(m, params, reqs, slots=3, max_len=64,
+                           prefill_chunk=chunk, prefix_cache=4)
+    assert plain == want and shared == want
+
+    pc = summ["prefix_cache"]
+    assert pc["inserts"] == 1                       # head prefilled once
+    assert pc["hits"] == n_shared - 1               # every other sharer
+    assert pc["shared_tokens"] == (n_shared - 1) * len(head)
+    # the skipped head chunks are real dispatch savings
+    saved = (n_shared - 1) * (len(head) // chunk)
+    assert summ["prefill_chunks"] == plain_summ["prefill_chunks"] - saved
+
+
+def test_prefix_cache_lru_and_proper_prefix():
+    """Unit-level PrefixCache behavior: longest proper prefix wins,
+    whole-prompt keys never match, LRU evicts beyond capacity."""
+    from repro.serve import PrefixCache
+    import jax.numpy as jnp
+    pc = PrefixCache(2)
+    mk = lambda v: {"c": jnp.full((2, 1, 4), v), "pos": jnp.array([0])}
+    a = np.arange(8, dtype=np.int32)
+    pc.insert(PrefixCache.key_for(a[:4]), 4, mk(1.0))
+    pc.insert(PrefixCache.key_for(a[:6]), 6, mk(2.0))
+
+    h, snap = pc.take(a)                  # longest proper prefix: 6
+    assert h == 6 and float(snap["c"][0, 0, 0]) == 2.0
+    assert pc.take(a[:4]) is None         # whole prompt == head: no hit
+    assert pc.take(np.flip(a).copy()) is None
+    # taken snapshots are copies: mutating one leaves the cache intact
+    snap["c"] = snap["c"].at[0].set(9.0)
+    _, snap2 = pc.take(a)
+    assert float(snap2["c"][0, 0, 0]) == 2.0
+
+    pc.insert(PrefixCache.key_for(a[:2]), 2, mk(3.0))   # evicts LRU (4)
+    assert pc.evictions == 1 and len(pc) == 2
+    h, _ = pc.take(a[:3])
+    assert h == 2
+    assert pc.stats()["hits"] == 3
+
+
+def test_deadline_admission_order(setup):
+    """EDF under a fake clock: earliest absolute deadline first, no-SLO
+    requests last (FCFS among themselves)."""
+    cfg, m, params = setup
+    sched = _sched(m, params, slots=1, max_len=48, admission="deadline",
+                   sampler=ScriptedSampler({}), clock=TickClock())
+    # submit order: no-SLO, loose, tight -> admit order: tight, loose, no
+    sched.submit(Request(uid=0, prompt=np.arange(4) % cfg.vocab,
+                         max_new_tokens=2))
+    sched.submit(Request(uid=1, prompt=np.arange(4) % cfg.vocab,
+                         max_new_tokens=2, slo_ms=9000.0))
+    sched.submit(Request(uid=2, prompt=np.arange(4) % cfg.vocab,
+                         max_new_tokens=2, slo_ms=1000.0))
+    assert sched.request_metrics[1].deadline == pytest.approx(2.0 + 9.0)
+    assert sched.request_metrics[2].deadline == pytest.approx(3.0 + 1.0)
+    sched.run()
+    admitted = sorted(sched.request_metrics.values(),
+                      key=lambda r: r.admitted_at)
+    assert [r.uid for r in admitted] == [2, 1, 0]
+
+
+def test_slo_violations_counted(setup):
+    """First tokens landing after the deadline are counted and flagged;
+    on-time requests are flagged False; no-SLO requests stay None."""
+    cfg, m, params = setup
+    sched = _sched(m, params, slots=1, max_len=48,
+                   sampler=ScriptedSampler({}), clock=TickClock())
+    sched.submit(Request(uid=0, prompt=np.arange(4) % cfg.vocab,
+                         max_new_tokens=3, slo_ms=60_000.0))
+    sched.submit(Request(uid=1, prompt=np.arange(4) % cfg.vocab,
+                         max_new_tokens=3, slo_ms=4000.0))   # will queue
+    sched.submit(Request(uid=2, prompt=np.arange(4) % cfg.vocab,
+                         max_new_tokens=3))
+    sched.run()
+    s = sched.summary()
+    assert s["slo_violations"] == 1
+    assert sched.request_metrics[0].slo_violated is False
+    assert sched.request_metrics[1].slo_violated is True
+    assert sched.request_metrics[2].slo_violated is None
+    assert s["ttft_p50"] is not None and s["ttft_p99"] is not None
+
+
+def test_summary_percentiles_match_numpy():
+    """The dependency-free percentile matches numpy's default (linear
+    interpolation), and summary() reports the tail keys."""
+    from repro.serve.metrics import percentile
+    rng = np.random.default_rng(3)
+    for n in (1, 2, 5, 100):
+        vals = rng.standard_normal(n).tolist()
+        for q in (0.0, 50.0, 90.0, 99.0, 100.0):
+            assert percentile(vals, q) == pytest.approx(
+                float(np.percentile(vals, q)))
+    assert percentile([], 50.0) is None
+
+
+def test_chunked_prefill_auto_disabled_for_ring_caches(setup):
+    """All-sliding-window models allocate a ring cache whose absolute
+    row indices alias; chunked prefill must switch itself off (surfaced
+    in summary) and serving must still work via whole-prompt prefill."""
+    import dataclasses
+    cfg, _, _ = setup
+    ring_cfg = dataclasses.replace(cfg, pattern="swa", window=8)
+    m = get_model(ring_cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    sched = _sched(m, params, slots=2, max_len=32, prefill_chunk=8)
+    assert sched._chunk_engine is None
+    sched.submit(Request(uid=0, prompt=np.arange(6) % ring_cfg.vocab,
+                         max_new_tokens=3))
+    done = sched.run()
+    assert len(done[0].tokens) == 3
+    assert sched.summary()["chunked_prefill"] == {
+        "enabled": False, "chunk_len": 8}
+
+
+def test_steady_state_decode_zero_allocations(setup):
+    """The donated step loop: across steady-state decode steps every
+    cache leaf keeps its device buffer (the donated program updates it
+    in place) and the number of live device arrays does not grow — no
+    per-step slice / write-back allocations, on both the fixed-shape
+    and the bucketed path."""
+    cfg, m, params = setup
+    pol = repro.BucketPolicy.default(max_batch=4, max_len=48)
+    for buckets in (None, pol):
+        sched = Scheduler(m, params,
+                          SchedulerOptions(slots=4, max_len=48,
+                                           fold=False, buckets=buckets),
+                          engine_worker="sync")
+        for uid in range(4):
+            sched.submit(Request(uid=uid,
+                                 prompt=np.arange(6) % cfg.vocab,
+                                 max_new_tokens=30))
+        sched.step()                     # admissions + first decode
+        sched.step()
+        ptrs = sched.slot_manager.buffer_pointers()
+        live = len(jax.live_arrays())
+        for _ in range(6):
+            sched.step()
+            assert sched.slot_manager.buffer_pointers() == ptrs
+        assert len(jax.live_arrays()) == live
+        sched.shutdown()
