@@ -27,8 +27,8 @@ import sys
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 #: Packages whose public surface must be documented.
-PACKAGES = ("src/repro/api", "src/repro/autotune", "src/repro/runtime",
-            "src/repro/replay", "src/repro/serve")
+PACKAGES = ("src/repro/api", "src/repro/autotune", "src/repro/dist",
+            "src/repro/runtime", "src/repro/replay", "src/repro/serve")
 
 #: Minimum fraction of public objects with docstrings.  Ratchet only
 #: upward.  Recorded at 1.00 in PR 7 (every public object documented);

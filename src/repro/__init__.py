@@ -20,6 +20,8 @@ _API_NAMES = (
     "BucketPolicy",
     "CompileOptions",
     "Executable",
+    "MeshSpec",
+    "MeshUnavailableError",
     "SchedulerOptions",
     "Signature",
     "available_frontends",

@@ -18,6 +18,7 @@ from .. import frontends
 from ..core.graph import Graph, Signature
 from ..frontends import available_frontends, get_frontend, register_frontend
 from ..frontends.trace import trace
+from ..dist.mesh import MeshSpec, MeshUnavailableError
 from ..runtime.buckets import Bucket, BucketPolicy
 from ..serve.options import SchedulerOptions
 from .cache import ExecutableCache, prune, resolve_cache_dir
@@ -90,7 +91,15 @@ def compile(model, options: Optional[CompileOptions] = None,
     if factory_kw:
         raise TypeError(f"unexpected args for graph targets: "
                         f"{sorted(factory_kw)}")
-    exe = get_target(options.target)(model, options)
+    if options.mesh is not None and options.target in ("jit", "pallas"):
+        # Sharded compilation (repro.dist): the mesh is a compile-time
+        # input; placement is propagated by the pass pipeline and the
+        # result still subclasses JitExecutable, so bucketing below and
+        # every other wrapper keep working.
+        from ..dist.executable import ShardedExecutable
+        exe = ShardedExecutable(model, options)
+    else:
+        exe = get_target(options.target)(model, options)
     if options.buckets is not None:
         # Shape-polymorphic dispatch: one warm program per batch bucket,
         # cold buckets compiled in the background (repro.runtime).
@@ -112,6 +121,8 @@ __all__ = [
     "GraphExecutable",
     "InterpretExecutable",
     "JitExecutable",
+    "MeshSpec",
+    "MeshUnavailableError",
     "Signature",
     "available_frontends",
     "available_targets",

@@ -122,10 +122,31 @@ class ExecutableCache:
         return {"dir": self.root, "hits": self.hits, "misses": self.misses}
 
 
+def _load_manifests(root: str):
+    """Map manifest path -> member ``.xla`` basenames, for every
+    ``*.manifest.json`` a :class:`~repro.dist.ShardedExecutable` wrote
+    next to its per-batch entries.  Unreadable manifests count as
+    empty (and so get cleaned up as dangling)."""
+    import json
+    out = {}
+    for name in os.listdir(root):
+        if not name.endswith(".manifest.json"):
+            continue
+        path = os.path.join(root, name)
+        members = []
+        try:
+            with open(path) as f:
+                members = [f"{k}.xla" for k in json.load(f).get("members", [])]
+        except (OSError, ValueError):
+            pass
+        out[path] = members
+    return out
+
+
 def prune(max_bytes: int, cache_dir: Optional[str] = None) -> dict:
     """Size-capped LRU sweep of the persistent executable cache.
 
-    Deletes least-recently-used ``.xla`` entries (mtime order — ``load``
+    Deletes least-recently-used entries (mtime order — ``load``
     refreshes it on every hit) until the directory's entry bytes fit in
     ``max_bytes``, and clears out orphaned ``.tmp`` files from
     interrupted writes.  Corruption-safe by construction: entries are
@@ -133,6 +154,14 @@ def prune(max_bytes: int, cache_dir: Optional[str] = None) -> dict:
     is whole-file, and a concurrently-vanishing file is skipped, so a
     reader racing the sweep sees either a valid entry or a clean miss —
     never a truncated one.
+
+    Sharded executables group their per-batch artifacts under a
+    ``*.manifest.json``; the sweep treats each group as ONE logical LRU
+    entry — recency is the group's hottest member, eviction removes the
+    members and the manifest together — so a pruned cache never holds a
+    manifest pointing at missing artifacts (nor sharded artifacts with
+    a dangling subset).  Manifests whose members are already all gone
+    are removed as dangling up front.
 
     Returns ``{"dir", "before_bytes", "after_bytes", "removed"}``.
     """
@@ -142,7 +171,9 @@ def prune(max_bytes: int, cache_dir: Optional[str] = None) -> dict:
     report = {"dir": root, "before_bytes": 0, "after_bytes": 0, "removed": 0}
     if not root or not os.path.isdir(root):
         return report
-    entries = []
+    manifests = _load_manifests(root)
+    grouped = {m for members in manifests.values() for m in members}
+    entries = []  # (mtime, size, [paths])  — one tuple per LRU unit
     for name in os.listdir(root):
         path = os.path.join(root, name)
         try:
@@ -150,21 +181,50 @@ def prune(max_bytes: int, cache_dir: Optional[str] = None) -> dict:
                 os.remove(path)
                 report["removed"] += 1
                 continue
-            if not name.endswith(".xla") or not os.path.isfile(path):
+            if (not name.endswith(".xla") or name in grouped
+                    or not os.path.isfile(path)):
                 continue
             st = os.stat(path)
         except OSError:
             continue                       # vanished mid-sweep: skip
-        entries.append((st.st_mtime, st.st_size, path))
+        entries.append((st.st_mtime, st.st_size, [path]))
+    for mpath, members in manifests.items():
+        group, mtime, size = [], 0.0, 0
+        for member in members:
+            path = os.path.join(root, member)
+            try:
+                st = os.stat(path)
+            except OSError:
+                continue                   # member already gone
+            group.append(path)
+            mtime = max(mtime, st.st_mtime)
+            size += st.st_size
+        if not group:                      # dangling manifest: clean up
+            try:
+                os.remove(mpath)
+                report["removed"] += 1
+            except OSError:
+                pass
+            continue
+        try:
+            size += os.stat(mpath).st_size
+        except OSError:
+            pass
+        entries.append((mtime, size, group + [mpath]))
     total = sum(size for _, size, _ in entries)
     report["before_bytes"] = total
     entries.sort()                         # oldest (coldest) first
-    for _, size, path in entries:
+    for _, size, paths in entries:
         if total <= max_bytes:
             break
-        try:
-            os.remove(path)
-        except OSError:
+        removed_any = False
+        for path in paths:                 # group eviction is atomic:
+            try:                           # members first, manifest last
+                os.remove(path)
+                removed_any = True
+            except OSError:
+                continue
+        if not removed_any:
             continue
         total -= size
         report["removed"] += 1

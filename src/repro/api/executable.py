@@ -109,6 +109,18 @@ def deserialize(data: bytes) -> Executable:
             options = options.replace(
                 buckets=BucketPolicy.from_dict(meta["policy"]))
         return api_compile(graph, options)
+    if kind == "sharded":
+        # Sharded artifact: source graph + the resolved placement
+        # (specs and collective edit log).  Construct the executable
+        # directly with the stored placement so the propagation pass
+        # replays it instead of re-deriving — the node list and
+        # graph.dist come out byte-identical to the process that
+        # serialized, so a warm executable cache hits with zero
+        # recompiles.
+        from ..dist.executable import ShardedExecutable
+        from ..frontends.container import load_model
+        graph = load_model(io.BytesIO(body))
+        return ShardedExecutable(graph, options, resolved=meta["dist"])
     if kind == "engine":
         from .engine_adapter import deserialize_engine
         return deserialize_engine(meta, body, options)

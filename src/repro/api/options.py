@@ -12,10 +12,25 @@ import dataclasses
 import json
 from typing import Optional, Tuple
 
+from ..dist.mesh import MeshSpec
 from ..runtime.buckets import BucketPolicy
 
 PRECISIONS = ("exact", "fast")
 AUTOTUNE_MODES = ("off", "cached", "full")
+
+
+def _normalize_rules(rules) -> Tuple[Tuple[str, object], ...]:
+    """Canonical, hashable form of a sharding-rules override: sorted
+    ``(logical, axes-tuple-or-None)`` pairs.  Accepts a mapping or a
+    pair sequence (the ``from_dict`` round-trip)."""
+    items = rules.items() if hasattr(rules, "items") else rules
+    out = []
+    for k, v in items:
+        if v is None or isinstance(v, str):
+            out.append((str(k), v))
+        else:
+            out.append((str(k), tuple(str(a) for a in v)))
+    return tuple(sorted(out))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,6 +94,22 @@ class CompileOptions:
                    ``None`` falls back to ``$REPRO_CAPTURE_DIR`` (a
                    *root*: the bundle lands in a per-compile
                    subdirectory); unset disables capture.
+    mesh:          a :class:`repro.dist.MeshSpec` (or any spelling its
+                   ``coerce`` accepts: ``"data=4,model=2"``, a dict of
+                   sizes) making device placement a compile-time input.
+                   The ``"jit"``/``"pallas"`` targets then produce a
+                   :class:`repro.dist.ShardedExecutable` whose graph
+                   carries per-tensor PartitionSpecs and explicit
+                   collective nodes; a single-device mesh stays
+                   bit-identical to the unsharded path.  ``None`` =
+                   today's unsharded compile.
+    sharding_rules: overrides on the logical-axis rules table
+                   (``repro.distributed.sharding.DEFAULT_RULES``) the
+                   propagation pass consults — a mapping/pairs of
+                   ``logical axis -> mesh axis (or axes, or None to
+                   force replication)``.  Only meaningful with
+                   ``mesh=``.  Both fields are part of the persistent
+                   cache key.
     """
 
     target: str = "jit"
@@ -93,6 +124,8 @@ class CompileOptions:
     autotune: str = "off"
     autotune_budget_ms: Optional[float] = 1000.0
     capture: Optional[str] = None
+    mesh: Optional[MeshSpec] = None
+    sharding_rules: Optional[Tuple[Tuple[str, object], ...]] = None
 
     def __post_init__(self) -> None:
         if self.precision not in PRECISIONS:
@@ -128,6 +161,12 @@ class CompileOptions:
             raise ValueError(
                 "batch_buckets (legacy, lazy) and buckets (runtime "
                 "engine cache) are mutually exclusive")
+        if self.mesh is not None and not isinstance(self.mesh, MeshSpec):
+            object.__setattr__(self, "mesh", MeshSpec.coerce(self.mesh))
+        if self.sharding_rules is not None:
+            object.__setattr__(
+                self, "sharding_rules",
+                _normalize_rules(self.sharding_rules))
 
     # ------------------------------------------------------------------
     def replace(self, **kw) -> "CompileOptions":

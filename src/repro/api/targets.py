@@ -263,6 +263,22 @@ class JitExecutable(GraphExecutable):
                          f"rules={lowering_fingerprint(self.lowering_target)}",
                          f"sel={self._selection_token(selection or {})}")
 
+    # -- sharding hooks (overridden by repro.dist.ShardedExecutable) ---
+    def _lowering_extras(self) -> dict:
+        """Extra ``execute_graph`` kwargs (mesh + shardings for sharded
+        compiles); the unsharded base adds nothing."""
+        return {}
+
+    def _input_sharding(self, name: str, batch_size: int):
+        """Sharding for the AOT input spec of graph input ``name``
+        (None = let XLA choose, the unsharded default)."""
+        return None
+
+    def _wrap_compiled(self, fn: Callable, batch_size: int) -> Callable:
+        """Post-compile hook around the AOT entry point (sharded
+        executables re-place call arguments here)."""
+        return fn
+
     # -- compilation ---------------------------------------------------
     def _resolve_selection(self, batch_size: int, *,
                            probe: bool = False):
@@ -338,10 +354,12 @@ class JitExecutable(GraphExecutable):
         lower_kw = dict(precision=self.options.precision,
                         target=self.lowering_target,
                         batch_size=batch_size,
-                        selection=selection)
+                        selection=selection,
+                        **self._lowering_extras())
         in_specs = [
             jax.ShapeDtypeStruct((batch_size,) + self.graph.inputs[n].shape,
-                                 self.graph.inputs[n].dtype)
+                                 self.graph.inputs[n].dtype,
+                                 sharding=self._input_sharding(n, batch_size))
             for n in input_names
         ]
 
@@ -376,7 +394,7 @@ class JitExecutable(GraphExecutable):
             self._xla_cost = cost[0] if isinstance(cost, list) else cost
         except Exception:
             pass
-        fn = wrap(exe)
+        fn = self._wrap_compiled(wrap(exe), batch_size)
         self._fns[batch_size] = fn
         if self._capture is not None:
             # Record this specialization: resolved selection, autotune

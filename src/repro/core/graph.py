@@ -250,6 +250,12 @@ class Graph:
         # graph.  Any mutation outside those two paths invalidates it
         # (None), and infer_shapes() falls back to the full walk.
         self._spec_cache: Optional[Dict[str, TensorSpec]] = {}
+        # Distribution annotations (repro.dist): {"mesh", "rules"} set
+        # by a sharded compile, {"shardings", "edits"} added by the
+        # propagation pass.  None = unsharded; mixed into
+        # structure_hash() only when set, so unsharded hashes (and
+        # every existing cache key) are unchanged.
+        self.dist: Optional[Dict[str, Any]] = None
 
     # -- construction -------------------------------------------------
     def add_input(self, name: str, shape: Sequence[int], dtype: str = "float32") -> str:
@@ -511,6 +517,8 @@ class Graph:
             ],
             "param_shapes": {k: v.shape for k, v in sorted(self.params.items())},
         }
+        if self.dist:
+            payload["dist"] = self.dist
         blob = json.dumps(payload, sort_keys=True, default=str).encode()
         return hashlib.sha256(blob).hexdigest()
 
@@ -537,6 +545,9 @@ class Graph:
                            if self._output_names is not None else None)
         g._spec_cache = (dict(self._spec_cache)
                          if self._spec_cache is not None else None)
+        if self.dist is not None:
+            import copy as _copy
+            g.dist = _copy.deepcopy(self.dist)
         return g
 
     def summary(self) -> str:

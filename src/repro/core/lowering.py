@@ -79,6 +79,14 @@ class LoweringContext:
     target: Optional[str] = None
     selection: Mapping[str, "KernelChoice"] = dataclasses.field(
         default_factory=dict)
+    #: Sharded compiles (repro.dist): the live jax Mesh, the resolved
+    #: per-tensor axis lists from ``graph.dist["shardings"]``, and the
+    #: mesh's {axis name: size} map (what collective lowerings consult
+    #: for their static shard geometry).  Empty/None = unsharded.
+    mesh: Optional[object] = None
+    shardings: Mapping[str, list] = dataclasses.field(default_factory=dict)
+    mesh_axis_sizes: Mapping[str, int] = dataclasses.field(
+        default_factory=dict)
 
     def act(self, fn: str, x: jnp.ndarray, attrs: Dict) -> jnp.ndarray:
         if self.precision == "fast":
@@ -211,6 +219,36 @@ def lowering_fingerprint(target: Optional[str] = None) -> str:
     return h.hexdigest()
 
 
+def sharding_constraint(x: jnp.ndarray, entry, mesh) -> jnp.ndarray:
+    """Apply one resolved per-tensor sharding as a
+    ``with_sharding_constraint`` on ``x`` (batch-inclusive axis lists,
+    as stored in ``graph.dist["shardings"]``).
+
+    Dims whose size does not divide the named axes' device product are
+    left unconstrained (e.g. batch 1 over ``data=4``) — the constraint
+    is a placement hint, never a shape requirement — so numerics are
+    mesh-independent by construction and a single-device mesh is a
+    no-op."""
+    if mesh is None or not entry or len(entry) != x.ndim:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec
+    sizes = dict(mesh.shape)
+    parts = []
+    for dim, axes in zip(x.shape, entry):
+        axes = [a for a in (axes or ()) if a in sizes]
+        k = 1
+        for a in axes:
+            k *= sizes[a]
+        if k <= 1 or dim % k:
+            parts.append(None)
+        else:
+            parts.append(axes[0] if len(axes) == 1 else tuple(axes))
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, PartitionSpec(*parts)))
+
+
 def execute_graph(
     graph: Graph,
     env: Dict[str, jnp.ndarray],
@@ -221,12 +259,17 @@ def execute_graph(
     target: Optional[str] = None,
     batch_size: Optional[int] = None,
     selection: Optional[Mapping[str, "KernelChoice"]] = None,
+    mesh=None,
+    shardings: Optional[Mapping[str, list]] = None,
 ) -> Dict[str, jnp.ndarray]:
     """Trace the graph.  ``env`` maps input names to (traced) arrays.
 
     ``use_pallas`` is the legacy spelling of ``target="pallas"``.  If
     ``batch_size`` is not given it is read off the first graph *input*
-    (never an arbitrary env entry).
+    (never an arbitrary env entry).  With a ``mesh`` + resolved
+    ``shardings`` (a sharded compile), every graph input and node
+    output gets its propagated placement re-applied as a sharding
+    constraint — the anchors XLA's SPMD partitioner works between.
     """
     if target is None:
         target = "pallas" if use_pallas else "jit"
@@ -237,17 +280,29 @@ def execute_graph(
                 break
         else:
             batch_size = 1
+    shardings = shardings or {}
     ctx = LoweringContext(
         params=params,
         batch_size=batch_size,
         precision=precision,
         target=target,
         selection=selection or {},
+        mesh=mesh,
+        shardings=shardings,
+        mesh_axis_sizes=dict(mesh.shape) if mesh is not None else {},
     )
+    if mesh is not None:
+        for name in graph.inputs:
+            if name in env:
+                env[name] = sharding_constraint(
+                    env[name], shardings.get(name), mesh)
     for node in graph.toposort():
         rule = get_lowering(node.op, target)
         ins = [env[t] for t in node.inputs]
-        env[node.output] = rule(node, ins, ctx)
+        out = rule(node, ins, ctx)
+        if mesh is not None:
+            out = sharding_constraint(out, shardings.get(node.output), mesh)
+        env[node.output] = out
     return {name: env[name] for name in graph.outputs}
 
 

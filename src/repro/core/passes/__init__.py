@@ -21,6 +21,8 @@ The default pipeline mirrors the paper's intermediate processing
 5. fold_batchnorm         — BN folded into adjacent conv/dense (§3.5)
 6. fuse_activation.post_bn — rerun: BN removal exposes new conv→act pairs
 7. optimize_layout        — compile-time weight re-layout (Eq. 3 analogue) (§3.3)
+8. propagate_sharding     — per-tensor PartitionSpecs + collectives
+                            (repro.dist); no-op without a mesh
 
 followed by ``plan_memory`` (lifetime analysis + arena assignment,
 §3.2), which is an analysis over the final graph rather than a rewrite,
@@ -54,6 +56,10 @@ from .memory_plan import MemoryPlan, plan_memory
 # stays "fuse_activation" so ablations remove both at once).
 register_pass("fuse_activation.post_bn", after=("fold_batchnorm",),
               before=("optimize_layout",))(fuse_activation)
+
+# Distribution: resolve per-tensor shardings + insert collectives
+# (repro.dist) on the final optimized graph; a no-op without a mesh.
+from .sharding import propagate_sharding
 
 #: The resolved default pipeline (instance names, in execution order).
 DEFAULT_PIPELINE: Tuple[str, ...] = resolve_order()
@@ -94,4 +100,5 @@ __all__ = [
     "plan_memory",
     "MemoryPlan",
     "optimize_layout",
+    "propagate_sharding",
 ]

@@ -1,0 +1,35 @@
+"""propagate_sharding — the distribution pass, as a registry citizen.
+
+The thin pipeline wrapper around :mod:`repro.dist.propagate`.  It
+registers in the ordinary pass registry (scheduled after every
+optimization pass: placement is decided on the *final* graph, so fusion
+and layout rewrites never have to reason about collective nodes), and
+is a no-op for graphs without a ``dist`` annotation — which keeps the
+default pipeline byte-identical for unsharded compiles while letting
+``DEFAULT_PIPELINE`` carry one canonical pass list for both.
+
+The heavy lifting lives in ``repro.dist`` and is imported lazily, so
+``repro.core`` keeps zero import-time dependency on the distribution
+subsystem (only sharded compiles pay for it).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from ..graph import Graph
+from .manager import register_pass
+
+
+@register_pass("propagate_sharding",
+               after=("canonicalize", "fold_constants", "fuse_pad",
+                      "fuse_activation", "fold_batchnorm",
+                      "fuse_activation.post_bn", "optimize_layout"))
+def propagate_sharding(graph: Graph) -> Tuple[Graph, Dict]:
+    """Resolve per-tensor shardings + insert collectives (repro.dist);
+    no-op (``{"sharded": False}``) for unsharded graphs."""
+    if not getattr(graph, "dist", None):
+        return graph, {"sharded": False}
+    from ...dist.propagate import propagate_shardings
+    stats = propagate_shardings(graph)
+    return graph, stats

@@ -1,0 +1,60 @@
+"""repro.dist — sharded compilation: the mesh as a compile-time input.
+
+The paper's thesis is baking statically known properties of the network
+into the compiled artifact; device placement is the largest such
+property most systems still decide at call time.  This package makes it
+part of the executable:
+
+    spec = repro.dist.MeshSpec.parse("data=4,model=2")
+    exe = repro.compile(graph, repro.CompileOptions(mesh=spec))
+    exe.partition_spec("dense0:out")   # -> PartitionSpec('data', 'model')
+
+``CompileOptions(mesh=...)`` routes the ``"jit"``/``"pallas"`` targets
+to a :class:`ShardedExecutable`: a ``propagate_sharding`` pass (in the
+ordinary PassManager registry, verified after every pass like shape
+inference) annotates every graph tensor with a ``PartitionSpec`` derived
+from the MaxText-style logical-axis rules in
+``repro.distributed.sharding``, inserting the collectives the placement
+implies — ``psum`` / ``all_gather`` / ``reduce_scatter`` / ``ppermute``
+are first-class graph ops lowered through ``@register_lowering`` like
+any other op, so the interpret oracle, the jit path and the Pallas path
+all agree on their semantics.  The resolved mesh + shardings are
+serialized into the artifact manifest and keyed into the persistent
+executable cache, so a second process reconstructs the same placement
+with zero re-propagation.
+
+A single-device mesh is bit-identical to the unsharded path: every
+collective degenerates to the identity and every sharding constraint is
+trivial, which is what lets the same compiled-artifact pipeline run
+from one CPU to a full pod.
+"""
+
+from __future__ import annotations
+
+from .mesh import MeshSpec, MeshUnavailableError, ensure_mesh_available
+from .collectives import COLLECTIVE_OPS
+from .propagate import (ShardingError, check_shardings, collective_summary,
+                        merged_rules, propagate_shardings)
+
+
+def __getattr__(name: str):
+    # ShardedExecutable pulls in repro.api (targets, cache); loading it
+    # lazily keeps ``repro.dist`` importable from repro.api.options
+    # without a cycle.
+    if name == "ShardedExecutable":
+        from .executable import ShardedExecutable
+        return ShardedExecutable
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+__all__ = [
+    "COLLECTIVE_OPS",
+    "MeshSpec",
+    "MeshUnavailableError",
+    "ShardedExecutable",
+    "ShardingError",
+    "check_shardings",
+    "collective_summary",
+    "ensure_mesh_available",
+    "merged_rules",
+    "propagate_shardings",
+]

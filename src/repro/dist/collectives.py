@@ -1,0 +1,108 @@
+"""Collectives as first-class graph ops.
+
+``psum`` / ``all_gather`` / ``reduce_scatter`` / ``ppermute`` register
+through the ordinary plug-in op machinery (``register_op`` +
+``register_shape_rule`` + ``@register_lowering``), so every target —
+the interpret oracle included — handles them and ``cost_summary()``
+counts them like any other node.
+
+Their *value* semantics are target-independent by construction, which
+is what keeps a single-device mesh bit-identical to the unsharded path:
+
+* ``psum``, ``all_gather`` and ``reduce_scatter`` are logical
+  identities.  They mark the points where the propagated placement
+  changes — the lowering re-applies the tensor's sharding constraint
+  there (see ``execute_graph``), and XLA's SPMD partitioner materializes
+  the actual all-reduce / all-gather / reduce-scatter on a real mesh.
+  The TensorRT/NCCL-converter shape: collectives are ordinary ops in
+  the graph, the runtime decides the wire traffic.
+* ``ppermute`` rolls the tensor by whole shards along ``dim``:
+  ``shift`` shard-blocks of ``size/axis_size`` elements.  With
+  ``axis_size`` 1 (no mesh, or a degenerate axis) the roll is a full
+  revolution — the identity — so the same graph runs everywhere.
+
+Attrs:
+
+    psum            axis            mesh axis (or list of axes) reduced over
+    all_gather      axis, dim      gather ``dim`` back from ``axis``
+    reduce_scatter  axis, dim      scatter ``dim`` across ``axis``
+    ppermute        axis, shift    roll by ``shift`` shards along ``dim``
+                                   (optional attrs: dim=-1, axis_size)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..core.graph import register_op, register_shape_rule
+from ..core.lowering import register_lowering
+
+#: op name -> required attrs, as registered with the graph IR.
+COLLECTIVE_OPS = {
+    "psum": ("axis",),
+    "all_gather": ("axis", "dim"),
+    "reduce_scatter": ("axis", "dim"),
+    "ppermute": ("axis", "shift"),
+}
+
+for _op, _attrs in COLLECTIVE_OPS.items():
+    register_op(_op, _attrs)
+
+
+def _identity_spec(node, input_specs, graph):
+    """Collectives never change the logical tensor: same shape/dtype."""
+    return input_specs[0]
+
+
+for _op in COLLECTIVE_OPS:
+    register_shape_rule(_op)(_identity_spec)
+
+
+def axis_names(node) -> tuple:
+    """The mesh axis (or axes) a collective node names, as a tuple."""
+    ax = node.attrs["axis"]
+    return (ax,) if isinstance(ax, str) else tuple(ax)
+
+
+def declared_axis_size(node, ctx) -> int:
+    """Static size of the collective's mesh axis: an explicit
+    ``axis_size`` attr wins, else the mesh spec the lowering context
+    carries, else 1 (no mesh: the degenerate, identity case)."""
+    if "axis_size" in node.attrs:
+        return int(node.attrs["axis_size"])
+    sizes = getattr(ctx, "mesh_axis_sizes", None) or {}
+    n = 1
+    for ax in axis_names(node):
+        n *= int(sizes.get(ax, 1))
+    return n
+
+
+@register_lowering("psum")
+def _lower_psum(node, ins, ctx):
+    # Logical identity: marks where a row-parallel partial sum becomes
+    # the full value.  execute_graph re-applies the (replicated-dim)
+    # sharding constraint on the output; GSPMD emits the all-reduce.
+    return ins[0]
+
+
+@register_lowering("all_gather")
+def _lower_all_gather(node, ins, ctx):
+    # Logical identity: marks where a sharded dim becomes replicated.
+    return ins[0]
+
+
+@register_lowering("reduce_scatter")
+def _lower_reduce_scatter(node, ins, ctx):
+    # Logical identity: marks where a replicated dim becomes sharded.
+    return ins[0]
+
+
+@register_lowering("ppermute")
+def _lower_ppermute(node, ins, ctx):
+    x = ins[0]
+    dim = int(node.attrs.get("dim", -1))
+    size = x.shape[dim]
+    k = max(declared_axis_size(node, ctx), 1)
+    block = size // k
+    shift = (int(node.attrs["shift"]) * block) % max(size, 1)
+    return jnp.roll(x, shift, axis=dim) if shift else x

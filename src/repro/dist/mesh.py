@@ -1,0 +1,185 @@
+"""MeshSpec — the device mesh as a frozen, serializable compile input.
+
+``jax.sharding.Mesh`` holds live device objects, which makes it
+unsuitable as a field of :class:`repro.CompileOptions` (options must be
+hashable, comparable and JSON-serializable so they double as persistent
+cache-key material).  ``MeshSpec`` is the static description — ordered
+``(axis_name, size)`` pairs — and ``build()`` late-binds it to whatever
+devices exist, raising a typed :class:`MeshUnavailableError` naming the
+axes that cannot be filled when the device set is too small (simulated
+or real device loss), instead of an opaque XLA error.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+
+class MeshUnavailableError(RuntimeError):
+    """The current device set cannot realize a :class:`MeshSpec`.
+
+    Raised at executable construction, before each sharded call, and by
+    the serve scheduler's step loop (surfaced in
+    ``summary()["faults"]``) when the visible device set shrinks below
+    what the mesh needs.  ``missing_axes`` names the axes that can no
+    longer be filled, in mesh order.
+    """
+
+    def __init__(self, spec: "MeshSpec", available: int) -> None:
+        self.spec = spec
+        self.available = available
+        self.needed = spec.size
+        self.missing_axes = spec.missing_axes(available)
+        super().__init__(
+            f"mesh {spec.describe()} needs {self.needed} device(s) but only "
+            f"{available} are visible; axes that cannot be filled: "
+            f"{', '.join(self.missing_axes) or '(none)'}")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshSpec:
+    """A device mesh described by ordered ``(axis_name, size)`` pairs.
+
+    The canonical data×model serving mesh is
+    ``MeshSpec(axes=(("data", 4), ("model", 2)))`` — batch rows shard
+    over ``data``, tensor-parallel dims over ``model``.  Accepts a dict
+    (``{"data": 4, "model": 2}``, insertion-ordered) or a sequence of
+    pairs; ``parse`` accepts the CLI spelling ``"data=4,model=2"``.
+    """
+
+    axes: Tuple[Tuple[str, int], ...] = (("data", 1),)
+
+    def __post_init__(self) -> None:
+        axes = self.axes
+        if isinstance(axes, dict):
+            axes = tuple(axes.items())
+        axes = tuple((str(n), int(s)) for n, s in axes)
+        if not axes:
+            raise ValueError("mesh needs at least one axis")
+        names = [n for n, _ in axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate mesh axis names in {names}")
+        for n, s in axes:
+            if s <= 0:
+                raise ValueError(f"mesh axis {n!r} must have positive "
+                                 f"size, got {s}")
+        object.__setattr__(self, "axes", axes)
+
+    # -- construction ---------------------------------------------------
+    @classmethod
+    def parse(cls, text: str) -> "MeshSpec":
+        """Build from the CLI spelling, e.g. ``"data=4,model=2"``."""
+        axes = []
+        for part in str(text).split(","):
+            part = part.strip()
+            if not part:
+                continue
+            if "=" not in part:
+                raise ValueError(
+                    f"bad mesh axis {part!r}; expected name=size "
+                    f"(e.g. 'data=4,model=2')")
+            name, size = part.split("=", 1)
+            axes.append((name.strip(), int(size)))
+        return cls(axes=tuple(axes))
+
+    @classmethod
+    def coerce(cls, value) -> "MeshSpec":
+        """Normalize any accepted spelling (MeshSpec, dict-of-sizes,
+        ``to_dict`` output, pair sequence, or ``"data=4"`` string)."""
+        if isinstance(value, cls):
+            return value
+        if isinstance(value, str):
+            return cls.parse(value)
+        if isinstance(value, dict):
+            if set(value) == {"axes"}:         # to_dict round-trip
+                return cls(axes=tuple(tuple(p) for p in value["axes"]))
+            return cls(axes=tuple(value.items()))
+        return cls(axes=tuple(tuple(p) for p in value))
+
+    # -- queries --------------------------------------------------------
+    @property
+    def names(self) -> Tuple[str, ...]:
+        """Axis names, in mesh order."""
+        return tuple(n for n, _ in self.axes)
+
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        """Axis sizes, in mesh order."""
+        return tuple(s for _, s in self.axes)
+
+    @property
+    def size(self) -> int:
+        """Total number of devices the mesh needs."""
+        return math.prod(self.shape)
+
+    @property
+    def is_single_device(self) -> bool:
+        """True when every axis has size 1 (the degenerate mesh that
+        must stay bit-identical to the unsharded path)."""
+        return self.size == 1
+
+    def axis_size(self, name: str) -> int:
+        """Size of axis ``name``; 1 for axes the mesh does not have."""
+        return dict(self.axes).get(name, 1)
+
+    def missing_axes(self, available: int) -> Tuple[str, ...]:
+        """Axes that cannot be filled with ``available`` devices: the
+        cumulative device product overflows at and after these axes."""
+        missing = []
+        running = 1
+        for name, size in self.axes:
+            running *= size
+            if running > max(available, 0):
+                missing.append(name)
+        return tuple(missing)
+
+    def describe(self) -> str:
+        """The CLI spelling, e.g. ``"data=4,model=2"``."""
+        return ",".join(f"{n}={s}" for n, s in self.axes)
+
+    # -- serialization --------------------------------------------------
+    def to_dict(self) -> dict:
+        """Plain-dict form for JSON artifacts; invert with ``coerce`` /
+        ``from_dict``."""
+        return {"axes": [[n, s] for n, s in self.axes]}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "MeshSpec":
+        """Rebuild from ``to_dict`` output."""
+        return cls.coerce(d)
+
+    def cache_token(self) -> str:
+        """Stable string for persistent cache keys."""
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    # -- realization ----------------------------------------------------
+    def build(self, devices: Optional[Sequence] = None):
+        """Late-bind to real devices: a ``jax.sharding.Mesh`` over the
+        first ``size`` visible devices (or the given ones).  Raises
+        :class:`MeshUnavailableError` naming the unfillable axes when
+        too few devices are visible."""
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh
+
+        devices = list(jax.devices() if devices is None else devices)
+        if len(devices) < self.size:
+            raise MeshUnavailableError(self, len(devices))
+        arr = np.array(devices[: self.size]).reshape(self.shape)
+        return Mesh(arr, self.names)
+
+
+def ensure_mesh_available(spec: MeshSpec,
+                          devices: Optional[Sequence] = None) -> None:
+    """Raise :class:`MeshUnavailableError` if the visible device set
+    cannot realize ``spec`` (the typed fault a sharded executable and
+    the serve step loop check before running — see
+    ``repro.distributed.fault``)."""
+    import jax
+
+    n = len(jax.devices() if devices is None else devices)
+    if n < spec.size:
+        raise MeshUnavailableError(spec, n)

@@ -1,2 +1,3 @@
 from . import sharding
-from .fault import StragglerWatchdog, run_with_restarts
+from .fault import (MeshUnavailableError, StragglerWatchdog, check_mesh,
+                    run_with_restarts)

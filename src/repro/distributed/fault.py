@@ -6,13 +6,40 @@ launcher can restart from the last checkpoint), and (b) hard node loss
 (the restart path itself: elastic restore re-shards to whatever mesh
 comes back — see checkpoint/).  Both paths are exercised in tests by
 simulation, per the assignment's CPU-only constraint.
+
+Inference-side device loss is typed, not opaque: a sharded executable
+or serve scheduler whose visible device set shrinks below its
+:class:`~repro.dist.mesh.MeshSpec` raises
+:class:`MeshUnavailableError` naming the axes that can no longer be
+filled (re-exported here; :func:`check_mesh` is the polling form the
+watchdogs compose with).  ``repro.serve`` records each raise in
+``summary()["faults"]``.
 """
 
 from __future__ import annotations
 
 import threading
 import time
-from typing import Callable, Optional
+from typing import Callable, Optional, Sequence
+
+from ..dist.mesh import (MeshSpec, MeshUnavailableError,
+                         ensure_mesh_available)
+
+
+def check_mesh(spec: MeshSpec,
+               devices: Optional[Sequence] = None) -> Optional[dict]:
+    """One mesh-availability poll: ``None`` when ``spec`` fits the
+    visible device set, else a plain-dict fault record (the shape
+    ``repro.serve`` stores in ``summary()["faults"]``) — the
+    non-raising twin of :func:`~repro.dist.mesh.ensure_mesh_available`
+    for watchdog loops that want to log and keep running."""
+    try:
+        ensure_mesh_available(spec, devices)
+    except MeshUnavailableError as e:
+        return {"mesh": e.spec.describe(), "needed": e.needed,
+                "available": e.available,
+                "missing_axes": list(e.missing_axes)}
+    return None
 
 
 class StragglerWatchdog:

@@ -1,31 +1,51 @@
-"""Production mesh builders.
+"""Production mesh builders, described as :class:`repro.MeshSpec`s.
 
-A function (not a module-level constant) so importing this module never
+Functions (not module-level constants) so importing this module never
 touches jax device state — the dry-run must set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 initialization, and smoke tests must see the real single device.
+
+The specs here are the same objects ``CompileOptions(mesh=...)`` and
+``SchedulerOptions(mesh=...)`` take (see :mod:`repro.dist.mesh`), so the
+launch scripts, the serve CLI and the compiler all speak one mesh
+spelling — ``MeshSpec.build()`` late-binds to real devices and raises a
+typed :class:`repro.MeshUnavailableError` naming the unfillable axes
+when the device set is too small.
 """
 
 from __future__ import annotations
 
-import jax
+from ..dist.mesh import MeshSpec
 
 
-def make_production_mesh(*, multi_pod: bool = False):
+def production_mesh_spec(*, multi_pod: bool = False) -> MeshSpec:
     """16×16 = 256 chips per pod; multi_pod stacks 2 pods -> 512 chips.
     The "pod" axis composes with "data" for the batch dimension (pure DP
     across pods), so the only cross-pod collective is the gradient
     reduce — the realistic 2-pod deployment."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    if multi_pod:
+        return MeshSpec(axes=(("pod", 2), ("data", 16), ("model", 16)))
+    return MeshSpec(axes=(("data", 16), ("model", 16)))
+
+
+def host_mesh_spec() -> MeshSpec:
+    """Whatever devices exist, as a 1×N (data, model) mesh — used by
+    tests/examples on CPU."""
+    import jax
+
+    return MeshSpec(axes=(("data", 1), ("model", len(jax.devices()))))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The live ``jax.sharding.Mesh`` of :func:`production_mesh_spec`
+    (back-compat shim — new code should carry the spec and ``build()``
+    at the last moment)."""
+    return production_mesh_spec(multi_pod=multi_pod).build()
 
 
 def make_host_mesh():
-    """Whatever devices exist, as a 1×N (data, model) mesh — used by
-    tests/examples on CPU."""
-    n = len(jax.devices())
-    return jax.make_mesh((1, n), ("data", "model"))
+    """The live ``jax.sharding.Mesh`` of :func:`host_mesh_spec`."""
+    return host_mesh_spec().build()
 
 
 # TPU v5e hardware constants (per chip) for the roofline terms.

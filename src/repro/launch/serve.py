@@ -19,6 +19,26 @@ import time
 import numpy as np
 
 
+def parse_sharding_rules(text):
+    """CLI spelling of ``CompileOptions.sharding_rules``: comma-separated
+    ``logical=axis`` pairs, ``+`` joining multiple mesh axes and an
+    empty right-hand side deleting the rule (forces replication) —
+    e.g. ``"batch=pod+data,kv_seq=model,seq="``."""
+    rules = []
+    for part in str(text).split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise ValueError(
+                f"bad sharding rule {part!r}; expected logical=axis "
+                f"(e.g. 'kv_seq=model,batch=pod+data,seq=')")
+        name, axes = part.split("=", 1)
+        axes = tuple(a.strip() for a in axes.split("+") if a.strip())
+        rules.append((name.strip(), axes or None))
+    return tuple(rules)
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
@@ -46,6 +66,16 @@ def main(argv=None) -> int:
                          "background compile of cold buckets")
     ap.add_argument("--no-buckets", dest="buckets", action="store_false",
                     help="fixed-shape serving (the default)")
+    ap.add_argument("--mesh", default=None,
+                    help="serve over a device mesh, e.g. 'data=4,model=2': "
+                         "batch rows shard over data, the decode KV cache "
+                         "over model (the kv_seq rule); the mesh is a "
+                         "compile input (CompileOptions.mesh), so the "
+                         "scheduler inherits it from the executable")
+    ap.add_argument("--sharding-rules", default=None,
+                    help="logical-axis rule overrides, e.g. "
+                         "'kv_seq=model,batch=pod+data,seq=' (empty "
+                         "right-hand side forces replication)")
     ap.add_argument("--json", action="store_true",
                     help="print the metrics summary as JSON")
     args = ap.parse_args(argv)
@@ -60,9 +90,15 @@ def main(argv=None) -> int:
     if args.buckets:
         policy = repro.BucketPolicy.default(max_batch=args.slots,
                                             max_len=args.max_len)
+    # The mesh rides the compile options (one mesh spelling everywhere:
+    # CLI -> MeshSpec -> CompileOptions -> SchedulerOptions default).
+    mesh = repro.MeshSpec.parse(args.mesh) if args.mesh else None
+    rules = (parse_sharding_rules(args.sharding_rules)
+             if args.sharding_rules else None)
 
     t0 = time.perf_counter()
-    exe = repro.compile(cfg, repro.CompileOptions(target="engine"))
+    exe = repro.compile(cfg, repro.CompileOptions(
+        target="engine", mesh=mesh, sharding_rules=rules))
     sched = repro.serve(exe, repro.SchedulerOptions(
         slots=args.slots, max_len=args.max_len, admission=args.admission,
         fold=not args.no_fold, buckets=policy,
@@ -100,6 +136,13 @@ def main(argv=None) -> int:
                   f"{rt['background_compiles']} background compiles, "
                   f"{rt['compile_stalls']} stalls, "
                   f"pad waste {rt['pad_waste_frac']:.1%}", flush=True)
+        if "sharding" in summary:
+            sh = summary["sharding"]
+            per = {a: f"{v['count']}x/{v['bytes'] / 1e3:.1f}KB"
+                   for a, v in sh["collectives"]["per_axis"].items()}
+            print(f"[serve] mesh {sh['mesh']} ({sh['devices']} devices): "
+                  f"collectives {per or 'none'}, "
+                  f"faults {len(summary.get('faults', []))}", flush=True)
         for c in sorted(done, key=lambda c: c.uid)[:4]:
             print(f"  uid={c.uid} reason={c.finish_reason} "
                   f"tokens={c.tokens[:8]}...", flush=True)

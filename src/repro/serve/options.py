@@ -10,6 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from ..dist.mesh import MeshSpec
 from ..runtime.buckets import BucketPolicy
 
 ADMISSION_POLICIES = ("fcfs", "shortest", "deadline")
@@ -70,6 +71,21 @@ class SchedulerOptions:
                   the effective floor is ``max(min_prefix,
                   prefill_chunk)`` since snapshots land on chunk
                   boundaries.
+    mesh:         a :class:`repro.MeshSpec` (or any spelling
+                  ``MeshSpec.coerce`` accepts, e.g. ``"data=2,model=2"``)
+                  enabling data×model-parallel serving: the batched KV
+                  cache shards its slot (batch) dim over the ``data``
+                  axes and its sequence dim over the ``model`` axes (the
+                  ``kv_seq`` rule), params are replicated, and the
+                  decode program is AOT-compiled against those placings
+                  so steady-state decode never stalls on a compile.
+                  The step loop re-checks device availability every
+                  iteration and surfaces shrink faults as typed
+                  :class:`repro.MeshUnavailableError` entries in
+                  ``summary()["faults"]``.  ``repro.serve`` defaults
+                  this from the executable's own
+                  ``CompileOptions.mesh``.  ``None`` = single-device
+                  serving (bit-identical tokens to a 1×1 mesh).
     """
 
     slots: int = 4
@@ -82,6 +98,7 @@ class SchedulerOptions:
     prefill_chunk: Optional[int] = None
     prefix_cache: int = 0
     min_prefix: int = 0
+    mesh: Optional[MeshSpec] = None
 
     def __post_init__(self) -> None:
         if self.slots <= 0:
@@ -121,6 +138,8 @@ class SchedulerOptions:
         if self.min_prefix < 0:
             raise ValueError(f"min_prefix must be >= 0, "
                              f"got {self.min_prefix}")
+        if self.mesh is not None and not isinstance(self.mesh, MeshSpec):
+            object.__setattr__(self, "mesh", MeshSpec.coerce(self.mesh))
 
     def replace(self, **kw) -> "SchedulerOptions":
         """Copy with the given fields replaced (re-validates)."""

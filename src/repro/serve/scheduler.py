@@ -35,6 +35,8 @@ assert exact numbers.
 from __future__ import annotations
 
 import dataclasses
+import math
+import re
 import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
@@ -43,10 +45,66 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..dist.mesh import MeshUnavailableError, ensure_mesh_available
 from .metrics import RequestMetrics, SchedulerMetrics
 from .options import SchedulerOptions
 from .prefix import PrefixCache, common_prefix_len
 from .slots import SlotManager, SlotState
+
+# replica_groups spellings in post-optimization HLO: explicit
+# ``{{0,2},{1,3}}`` lists and the iota form ``[2,2]<=[4]`` (G groups
+# of S devices — the second dim is the group size).
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _group_size(line: str) -> int:
+    """Devices per replica group of one collective op (0 if unknown)."""
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([x for x in m.group(1).split(",") if x.strip()])
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 0
+
+
+def _axis_collectives(texts: List[str], spec) -> dict:
+    """Per-mesh-axis collective counts and bytes-moved estimates from
+    compiled post-optimization HLO.
+
+    Bytes are each collective's result-buffer size weighted by its
+    enclosing ``while`` trip counts (the scanned-layers multiplier —
+    see :mod:`repro.launch.hlo_analysis`); each op is attributed to the
+    mesh axes whose size matches its replica-group size, split evenly
+    when several axes share a size.
+    """
+    from ..launch import hlo_analysis as H
+    per_axis = {n: {"count": 0, "bytes": 0.0}
+                for n, s in spec.axes if s > 1}
+    counts: Dict[str, int] = {}
+    total = 0.0
+    for text in texts:
+        comps = H.parse_hlo(text)
+        mult, _ = H._multipliers(comps)
+        for cname, comp in comps.items():
+            m = mult.get(cname, 1.0)
+            for op in comp.ops:
+                base = op.opcode[:-6] if op.opcode.endswith("-start") \
+                    else op.opcode
+                if base not in H._COLLECTIVES:
+                    continue
+                moved = m * H._tshape_bytes(op.type_str)
+                counts[base] = counts.get(base, 0) + 1
+                total += moved
+                k = _group_size(op.line)
+                axes = [a for a, s in spec.axes if s > 1 and s == k] \
+                    or list(per_axis)
+                for a in axes:
+                    per_axis[a]["count"] += 1
+                    per_axis[a]["bytes"] += moved / max(len(axes), 1)
+    return {"counts": counts, "per_axis": per_axis,
+            "total_bytes": int(total)}
 
 
 @dataclasses.dataclass
@@ -128,7 +186,8 @@ class Scheduler:
     def __init__(self, model, params, options: SchedulerOptions, *,
                  sampler: Optional[Callable] = None,
                  clock: Callable[[], float] = time.perf_counter,
-                 engine_worker: str = "thread") -> None:
+                 engine_worker: str = "thread",
+                 device_source: Optional[Callable] = None) -> None:
         self.model = model
         self.cfg = model.cfg
         self.options = options
@@ -141,8 +200,28 @@ class Scheduler:
         self.sampler = sampler or TemperatureSampler(options.seed)
         self.clock = clock
 
-        self.slot_manager = SlotManager(model, options.slots,
-                                        options.max_len)
+        # data×model-parallel serving (repro.dist): bind the mesh before
+        # any program builds so placements are committed up front.
+        # ``device_source`` is the fault-injection seam: tests shrink the
+        # visible device set and the step loop raises a typed
+        # MeshUnavailableError (recorded in ``summary()["faults"]``).
+        self.mesh = None
+        self._faults: List[dict] = []
+        self._device_source = device_source or jax.devices
+        if options.mesh is not None:
+            ensure_mesh_available(options.mesh, self._device_source())
+            self.mesh = options.mesh.build(self._device_source())
+            from jax.sharding import NamedSharding, PartitionSpec
+            # params replicate; the batched KV cache shards (see
+            # _leaf_sharding) — the data×model split the mesh names.
+            self.params = jax.device_put(
+                self.params, jax.tree.map(
+                    lambda _: NamedSharding(self.mesh, PartitionSpec()),
+                    self.params))
+
+        self.slot_manager = SlotManager(
+            model, options.slots, options.max_len,
+            shard=self._leaf_sharding if self.mesh is not None else None)
         self._lock = threading.Lock()
         self._queue: List[Request] = []
         self.done: List[Completion] = []
@@ -153,9 +232,11 @@ class Scheduler:
         self.last_token = np.zeros((options.slots, 1), np.int32)
 
         # compiled programs (donated cache: in-place buffer reuse)
-        self._decode = jax.jit(
-            lambda p, c, t: model.decode_step(p, c, t),
-            donate_argnums=(1,))
+        def decode_body(p, c, t):
+            logits, c = model.decode_step(p, self._compute_view(c), t)
+            return logits, self._constrain_cache(c)
+
+        self._decode = jax.jit(decode_body, donate_argnums=(1,))
         self._prefill = jax.jit(lambda p, b, c: model.prefill(p, b, c))
 
         # shape-polymorphic serving (repro.runtime): warm programs per
@@ -170,6 +251,124 @@ class Scheduler:
             self._init_chunking(engine_worker)
         if options.buckets is not None:
             self._init_bucketing(engine_worker)
+
+        # Under a mesh without bucketing, AOT-compile the fixed-shape
+        # decode program at construction (load time, not latency) against
+        # the committed placements: steady-state sharded decode never
+        # stalls on a compile, mirroring the bucketed warm-up guarantee.
+        self._decode_aot = None
+        if self.mesh is not None and self._decode_engine is None:
+            self._decode_aot = self._decode.lower(
+                self._aot_specs(self.params),
+                self._aot_specs(self.slot_manager.cache,
+                                shard=self._leaf_sharding),
+                self._aot_specs(jax.ShapeDtypeStruct(
+                    (options.slots, 1), jnp.int32))).compile()
+
+    # -- mesh placement ------------------------------------------------
+    def _rule_axes(self, logical: str):
+        """Mesh axes the logical-axis rule maps to, filtered to axes
+        this mesh actually has (``batch`` → data axes, ``kv_seq`` →
+        the model axes of the flash-decoding KV layout)."""
+        from ..dist.propagate import merged_rules
+        names = set(self.mesh.axis_names)
+        return tuple(a for a in merged_rules().get(logical, ())
+                     if a in names)
+
+    def _leaf_sharding(self, leaf, *, compute: bool = False):
+        """NamedSharding for one batched-cache leaf.  Leaves are
+        (L, B, S, ...) except the position vector (B,): the slot
+        (batch) dim shards over the ``batch`` rule's axes and the KV
+        sequence dim over the ``kv_seq`` rule's ("model" — the
+        flash-decoding storage layout).  Dims an axis product doesn't
+        divide stay replicated, so any slots/max_len runs on any mesh.
+
+        ``compute=True`` is the decode-time view: batch sharding only.
+        Like the graph-IR path, sharding here is PLACEMENT, never math —
+        row parallelism over ``data`` leaves each row's reduction order
+        exactly the single-device order (bit-identical tokens), while
+        the model-axis seq shards are gathered whole by GSPMD (the
+        per-step all-gather ``summary()["sharding"]`` reports).  The
+        model axis still divides per-device KV-cache memory by its size
+        between steps."""
+        from jax.sharding import NamedSharding, PartitionSpec
+        sizes = dict(self.mesh.shape)
+
+        def fit(dim, axes):
+            axes = [a for a in axes if sizes.get(a, 1) > 1]
+            k = math.prod(sizes[a] for a in axes) if axes else 1
+            if k <= 1 or dim % k:
+                return None
+            return axes[0] if len(axes) == 1 else tuple(axes)
+
+        parts = [None] * leaf.ndim
+        b_dim = 0 if leaf.ndim == 1 else 1
+        parts[b_dim] = fit(leaf.shape[b_dim], self._rule_axes("batch"))
+        if leaf.ndim >= 3 and not compute:
+            parts[2] = fit(leaf.shape[2], self._rule_axes("kv_seq"))
+        return NamedSharding(self.mesh, PartitionSpec(*parts))
+
+    def _compute_view(self, cache):
+        """The traced decode-time view of the stored cache: keep the
+        batch (``data``) sharding, gather the model-axis KV shards
+        whole (see ``_leaf_sharding``)."""
+        if self.mesh is None:
+            return cache
+        return jax.tree.map(
+            lambda l: jax.lax.with_sharding_constraint(
+                l, self._leaf_sharding(l, compute=True)), cache)
+
+    def _constrain_cache(self, cache):
+        """Pin a traced cache pytree to its committed storage placement,
+        so the donated decode output keeps the sharding its AOT program
+        (and the next step's input spec) committed to."""
+        if self.mesh is None:
+            return cache
+        return jax.tree.map(
+            lambda l: jax.lax.with_sharding_constraint(
+                l, self._leaf_sharding(l)), cache)
+
+    def _aot_specs(self, tree, shard: Optional[Callable] = None):
+        """ShapeDtypeStructs for AOT lowering.  Under a mesh every leaf
+        carries its committed NamedSharding (``shard`` per leaf, else
+        replicated), so the compiled programs accept exactly the arrays
+        the scheduler holds — AOT programs reject committed arguments
+        whose placement disagrees with their input shardings."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        def one(a):
+            if self.mesh is None:
+                return jax.ShapeDtypeStruct(a.shape, a.dtype)
+            s = shard(a) if shard is not None \
+                else NamedSharding(self.mesh, PartitionSpec())
+            return jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s)
+
+        return jax.tree.map(one, tree)
+
+    def _tokens(self) -> jnp.ndarray:
+        """The last-token batch, placed for the decode program (the
+        replicated spec its AOT lowering committed to)."""
+        t = jnp.asarray(self.last_token)
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            t = jax.device_put(
+                t, NamedSharding(self.mesh, PartitionSpec()))
+        return t
+
+    def _check_mesh(self) -> None:
+        """Step-loop fault check: raise (and record) a typed
+        :class:`MeshUnavailableError` naming the unfillable axes when
+        the visible device set shrank below what the mesh needs."""
+        if self.options.mesh is None:
+            return
+        try:
+            ensure_mesh_available(self.options.mesh, self._device_source())
+        except MeshUnavailableError as e:
+            self._faults.append({
+                "at": self.clock(), "mesh": e.spec.describe(),
+                "needed": e.needed, "available": e.available,
+                "missing_axes": list(e.missing_axes)})
+            raise
 
     # -- bucketed engines ----------------------------------------------
     def _cache_grows_with_max_len(self) -> bool:
@@ -192,15 +391,17 @@ class Scheduler:
                                    max_len=opts.max_len)
         cache_spec = jax.eval_shape(
             lambda: self.model.init_cache(1, opts.max_len))
-        params_spec = jax.tree.map(
-            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.params)
+        params_spec = self._aot_specs(self.params)
         len_ok = (policy.len_buckets
                   and isinstance(cache_spec, dict) and "pos" in cache_spec
                   and self._cache_grows_with_max_len())
 
-        full_spec = jax.eval_shape(
-            lambda: self.model.init_cache(opts.slots, opts.max_len))
-        tok_spec = jax.ShapeDtypeStruct((opts.slots, 1), jnp.int32)
+        full_spec = self._aot_specs(
+            jax.eval_shape(
+                lambda: self.model.init_cache(opts.slots, opts.max_len)),
+            shard=self._leaf_sharding if self.mesh is not None else None)
+        tok_spec = self._aot_specs(
+            jax.ShapeDtypeStruct((opts.slots, 1), jnp.int32))
 
         def build_decode(bucket):
             # EVERY bucket's program takes (and donates) the FULL
@@ -212,8 +413,10 @@ class Scheduler:
             b = bucket.batch
 
             def step(p, c, t):
+                c = self._compute_view(c)
                 if b >= opts.slots:
-                    return self.model.decode_step(p, c, t)
+                    logits, c = self.model.decode_step(p, c, t)
+                    return logits, self._constrain_cache(c)
                 sub = jax.tree.map(
                     lambda l: l[:b] if l.ndim == 1 else l[:, :b], c)
                 logits, sub = self.model.decode_step(p, sub, t[:b])
@@ -221,7 +424,7 @@ class Scheduler:
                 new_c = jax.tree.map(
                     lambda f, s: jax.lax.dynamic_update_slice_in_dim(
                         f, s, 0, axis=axis(f)), c, sub)
-                return logits, new_c
+                return logits, self._constrain_cache(new_c)
 
             fn = jax.jit(step, donate_argnums=(1,))
             return fn.lower(params_spec, full_spec, tok_spec).compile()
@@ -248,8 +451,9 @@ class Scheduler:
                 b_spec[name] = jax.ShapeDtypeStruct(shape, dt)
             l_spec = jax.ShapeDtypeStruct((), jnp.int32)
             fn = jax.jit(self._prefill_fixup)
-            return fn.lower(params_spec, b_spec, cache_spec,
-                            l_spec).compile()
+            return fn.lower(params_spec, self._aot_specs(b_spec),
+                            self._aot_specs(cache_spec),
+                            self._aot_specs(l_spec)).compile()
 
         self._prefill_engine = EngineCache(
             BucketPolicy(batch_buckets=(1,),
@@ -281,19 +485,19 @@ class Scheduler:
                 and isinstance(cache_spec, dict) and "pos" in cache_spec
                 and self._cache_grows_with_max_len()):
             return
-        params_spec = jax.tree.map(
-            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.params)
+        params_spec = self._aot_specs(self.params)
 
         def build_chunk(bucket):
-            t_spec = jax.ShapeDtypeStruct((1, bucket.length), jnp.int32)
-            s_spec = jax.ShapeDtypeStruct((), jnp.int32)
+            t_spec = self._aot_specs(
+                jax.ShapeDtypeStruct((1, bucket.length), jnp.int32))
+            s_spec = self._aot_specs(jax.ShapeDtypeStruct((), jnp.int32))
             # the single-row cache is donated: each chunk fills it in
             # place (PrefixCache copies before/after, never aliases it)
             fn = jax.jit(
                 lambda p, t, c, s, n: self.model.prefill_chunk(
                     p, t, c, s, n),
                 donate_argnums=(2,))
-            return fn.lower(params_spec, t_spec, cache_spec,
+            return fn.lower(params_spec, t_spec, self._aot_specs(cache_spec),
                             s_spec, s_spec).compile()
 
         self._chunk_engine = EngineCache(
@@ -629,8 +833,7 @@ class Scheduler:
             self.last_token[dst, 0] = self.last_token[src, 0]
         entry, _, _ = self._decode_engine.get(k)
         logits, self.slot_manager.cache = entry(
-            self.params, self.slot_manager.cache,
-            jnp.asarray(self.last_token))
+            self.params, self.slot_manager.cache, self._tokens())
         return logits[:, 0]
 
     # -- the step loop -------------------------------------------------
@@ -638,6 +841,7 @@ class Scheduler:
         """One scheduler iteration: admit into free slots, one batched
         decode step, sample + evict.  Returns the number of slots still
         active afterwards."""
+        self._check_mesh()          # no-op unless mesh-parallel serving
         self._admit_free_slots()
         self._advance_prefills()    # no-op unless chunked prefill is on
         active = self.slot_manager.active_slots()
@@ -647,9 +851,9 @@ class Scheduler:
             logits = self._bucketed_decode(len(active))
             active = self.slot_manager.active_slots()  # post-compaction
         else:
-            logits, self.slot_manager.cache = self._decode(
-                self.params, self.slot_manager.cache,
-                jnp.asarray(self.last_token))
+            decode = self._decode_aot or self._decode
+            logits, self.slot_manager.cache = decode(
+                self.params, self.slot_manager.cache, self._tokens())
             logits = logits[:, 0]
         self.metrics.decode_steps += 1
         self.metrics.decode_slot_steps += len(active)
@@ -729,7 +933,32 @@ class Scheduler:
             }
         if self._prefix_cache is not None:
             out["prefix_cache"] = self._prefix_cache.stats()
+        if self.options.mesh is not None:
+            out["faults"] = [dict(f) for f in self._faults]
+            out["sharding"] = self._sharding_summary()
         return out
+
+    def _sharding_summary(self) -> dict:
+        """Mesh description plus per-axis collective counts and
+        bytes-moved estimates, read from the compiled decode program(s)'
+        post-optimization HLO (see :func:`_axis_collectives`)."""
+        spec = self.options.mesh
+        texts: List[str] = []
+        programs = []
+        if self._decode_aot is not None:
+            programs.append(self._decode_aot)
+        elif self._decode_engine is not None:
+            programs.extend(
+                self._decode_engine.peek(b)
+                for b in self._decode_engine.warm_buckets())
+        for prog in programs:
+            try:
+                texts.append(prog.as_text())
+            except Exception:
+                continue               # text unavailable: skip, not fail
+        return {"mesh": spec.describe(), "devices": spec.size,
+                "decode_programs": len(texts),
+                "collectives": _axis_collectives(texts, spec)}
 
     # legacy Engine attribute surface, used by the deprecated shim
     @property

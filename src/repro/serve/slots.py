@@ -14,7 +14,7 @@ Extracted and generalized from ``inference.engine.Engine``'s
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, List, Optional, Tuple
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 
@@ -33,17 +33,38 @@ class SlotManager:
     """Owns the batched KV cache and the per-slot request states:
     admission writes one request's rows in, retirement frees them."""
 
-    def __init__(self, model, slots: int, max_len: int) -> None:
+    def __init__(self, model, slots: int, max_len: int, *,
+                 shard: Optional[Callable[[Any], Any]] = None) -> None:
         self.slots = slots
         self.max_len = max_len
         self.cache = model.init_cache(slots, max_len)
         self._states: List[Optional[SlotState]] = [None] * slots
+        # Mesh-aware serving: ``shard`` maps a cache leaf to its
+        # NamedSharding.  The cache is placed once here and every
+        # cache-mutating program re-constrains its output, so the
+        # batched cache NEVER drifts off its placement — the AOT decode
+        # programs commit to exactly these shardings.
+        self._shard = shard
+        if shard is not None:
+            self.cache = jax.tree.map(
+                lambda l: jax.device_put(l, shard(l)), self.cache)
+
+        def constrain(tree):
+            if shard is None:
+                return tree
+            return jax.tree.map(
+                lambda l: jax.lax.with_sharding_constraint(l, shard(l)),
+                tree)
+
         # donate the batched cache: splice writes one row in place
-        self._splice = jax.jit(self._splice_impl, donate_argnums=(0,),
-                               static_argnums=(2,))
+        self._splice = jax.jit(
+            lambda c, o, slot: constrain(self._splice_impl(c, o, slot)),
+            donate_argnums=(0,), static_argnums=(2,))
         # row move for compaction; src/dst are traced, so one program
         # serves every (src, dst) pair
-        self._move = jax.jit(self._move_impl, donate_argnums=(0,))
+        self._move = jax.jit(
+            lambda c, s, d: constrain(self._move_impl(c, s, d)),
+            donate_argnums=(0,))
 
     # ------------------------------------------------------------------
     @staticmethod

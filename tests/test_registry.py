@@ -36,7 +36,8 @@ def _cnn(seed=0):
 def test_default_pipeline_resolution_matches_legacy_order():
     assert DEFAULT_PIPELINE == (
         "canonicalize", "fold_constants", "fuse_pad", "fuse_activation",
-        "fold_batchnorm", "fuse_activation.post_bn", "optimize_layout")
+        "fold_batchnorm", "fuse_activation.post_bn", "optimize_layout",
+        "propagate_sharding")
 
 
 def test_explicit_pipeline_allows_base_names_and_duplicates():
@@ -119,7 +120,7 @@ def test_dump_ir_writes_stage_files(tmp_path):
     exe.ensure_compiled(1)
     names = sorted(p.name for p in tmp_path.iterdir())
     assert names[0] == "00-input.txt"
-    assert f"{len(DEFAULT_PIPELINE):02d}-optimize_layout.txt" in names
+    assert f"{len(DEFAULT_PIPELINE):02d}-propagate_sharding.txt" in names
     assert "Graph:" in (tmp_path / "00-input.txt").read_text()
 
 

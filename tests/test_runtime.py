@@ -363,6 +363,44 @@ def test_prune_lru_sweep_and_tmp_cleanup(tmp_path):
     assert prune(10, str(tmp_path / "nope"))["removed"] == 0
 
 
+def test_prune_sharded_manifest_is_one_atomic_group(tmp_path):
+    """A sharded executable's per-batch artifacts + manifest are one LRU
+    unit: recency is the hottest member, eviction takes the whole group,
+    and a dangling manifest is cleaned up front."""
+    import json
+
+    # Group of two cold members (mtimes 1 and 5) under one manifest.
+    for i, key in enumerate(("s1", "s2")):
+        p = tmp_path / f"{key}.xla"
+        p.write_bytes(b"x" * 100)
+        os.utime(p, (1 + 4 * i, 1 + 4 * i))
+    man = tmp_path / "g.manifest.json"
+    man.write_text(json.dumps({"mesh": {"axes": [["data", 1]]},
+                               "members": ["s1", "s2"]}))
+    # A loose entry colder than the group's hottest member (mtime 3):
+    # evicted first even though member s2 (mtime 5) is hotter than it.
+    loose = tmp_path / "loose.xla"
+    loose.write_bytes(b"x" * 100)
+    os.utime(loose, (3, 3))
+    group_bytes = 200 + man.stat().st_size
+
+    rep = prune(group_bytes, str(tmp_path))
+    assert rep["removed"] == 1                      # just the loose entry
+    left = sorted(p.name for p in tmp_path.iterdir())
+    assert left == ["g.manifest.json", "s1.xla", "s2.xla"]
+
+    # Shrinking below the group size removes members AND manifest —
+    # never a manifest pointing at missing artifacts.
+    rep = prune(50, str(tmp_path))
+    assert rep["after_bytes"] == 0
+    assert list(tmp_path.iterdir()) == []
+
+    # Dangling manifest (members already gone) is swept up front.
+    man.write_text(json.dumps({"members": ["gone"]}))
+    assert prune(10_000, str(tmp_path))["removed"] == 1
+    assert list(tmp_path.iterdir()) == []
+
+
 def test_store_auto_prunes_under_env_cap(tmp_path, monkeypatch):
     def compiled(i):
         fn = jax.jit(lambda x: x + i)

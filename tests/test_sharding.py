@@ -1,17 +1,26 @@
 """Sharding rules + a real multi-device SPMD check in a subprocess
 (8 forced host devices — the main pytest process keeps the 1 real
-device, per the assignment)."""
+device, per the assignment), plus the mesh-aware-compile golden tests:
+propagation placement, single-device bit-identity over the Table-1
+suite, 2×2 data×model serve token identity, and the cross-process
+serialize/deserialize warm-cache round-trip."""
 
+import os
 import subprocess
 import sys
 import textwrap
 
+import numpy as np
 import pytest
 
 import jax
 from jax.sharding import PartitionSpec as P
 
+import repro
+from repro.api import CompileOptions
+from repro.core import ModelBuilder
 from repro.distributed import sharding as shd
+from repro.dist.mesh import MeshSpec
 
 
 def test_spec_for_dedups_mesh_axes():
@@ -83,3 +92,223 @@ def test_spmd_train_step_8dev(arch):
         [sys.executable, "-c", _SPMD_SCRIPT.format(arch=arch)],
         capture_output=True, text=True, cwd=".", timeout=900)
     assert "SPMD_OK" in out.stdout, out.stdout + out.stderr
+
+
+# ---------------------------------------------------------------------------
+# Mesh-aware compilation (repro.dist): propagation golden placement
+# ---------------------------------------------------------------------------
+def _mlp_block():
+    """A transformer-style MLP block in the graph IR: expand, contract,
+    residual — the shape the Megatron column/row split targets."""
+    mb = ModelBuilder().seed(7)
+    x = mb.input((16,))
+    up = mb.dense(x, 32, activation="relu")
+    down = mb.dense(up, 16)
+    out = mb.add(down, x)
+    return mb.build([out]), x, up, down, out
+
+
+def test_propagation_golden_partition_specs():
+    """Under DEFAULT_RULES on data=2,model=2 the MLP block resolves to
+    the textbook placement: batch over data everywhere, the expansion
+    column-parallel over model, the contraction row-parallel closed by
+    exactly one psum, residual and output replicated."""
+    from repro.dist.propagate import propagate_shardings
+
+    g, x, up, down, out = _mlp_block()
+    g.dist = {"mesh": MeshSpec.parse("data=2,model=2").to_dict(),
+              "rules": []}
+    stats = propagate_shardings(g)
+    assert stats == {"sharded": True, "reused": False, "collectives": 1}
+
+    sh = g.dist["shardings"]
+    assert sh[x] == [["data"], None]            # input: batch over data
+    assert sh[up] == [["data"], ["model"]]      # column parallel (32 % 2)
+    assert sh[down] == [["data"], None]         # row-parallel partial sum
+    assert sh[out] == [["data"], None]          # residual: replicated
+
+    psums = [n for n in g.nodes if n.op == "psum"]
+    assert len(psums) == 1
+    assert psums[0].attrs == {"axis": ["model"], "axis_size": 2}
+    assert sh[psums[0].output] == [["data"], None]
+    # every later consumer reads the reduced value, not the partial sum
+    add = next(n for n in g.nodes if n.op == "add")
+    assert psums[0].output in add.inputs and down not in add.inputs
+    # ...and the edit log records exactly that placement for replay
+    edits = g.dist["edits"]
+    assert [e["op"] for e in edits["inserted"]] == ["psum"]
+    assert edits["outputs"] == g.outputs
+
+
+def test_propagation_rule_override_forces_replication():
+    """sharding_rules=(("mlp", None),) deletes the tensor-parallel rule:
+    no column split, no collectives, batch sharding only."""
+    from repro.dist.propagate import propagate_shardings
+
+    g, x, up, down, out = _mlp_block()
+    g.dist = {"mesh": MeshSpec.parse("data=2,model=2").to_dict(),
+              "rules": [["mlp", None]]}
+    stats = propagate_shardings(g)
+    assert stats["collectives"] == 0
+    assert all(e == [["data"]] + [None] * (len(e) - 1)
+               for e in g.dist["shardings"].values())
+
+
+# ---------------------------------------------------------------------------
+# Single-device mesh == unsharded, bit for bit, over the Table-1 suite
+# ---------------------------------------------------------------------------
+def _table1_suite():
+    from benchmarks.table1_models import SUITE
+    return SUITE
+
+
+@pytest.mark.parametrize("name", ["C-HTWK", "C-BH", "Detector",
+                                  "Segmenter", "MobileNetV2", "VGG19"])
+def test_single_device_mesh_bit_identical(name):
+    """CompileOptions(mesh=...) on a 1-device mesh must be bit-identical
+    to the unsharded JitExecutable on every Table-1 config — sharding is
+    placement, never math."""
+    from repro.api.capture import seeded_inputs
+    from repro.dist import ShardedExecutable
+
+    g = _table1_suite()[name]()
+    inputs = seeded_inputs(g, 1)
+    base = repro.compile(g, CompileOptions())(**inputs)
+    exe = repro.compile(g, CompileOptions(mesh="data=1,model=1"))
+    assert isinstance(exe, ShardedExecutable)
+    sharded = exe(**inputs)
+    assert sorted(base) == sorted(sharded)
+    for k in base:
+        np.testing.assert_array_equal(np.asarray(base[k]),
+                                      np.asarray(sharded[k]))
+
+
+# ---------------------------------------------------------------------------
+# data×model serve: 2×2 virtual devices, tokens identical to 1 device
+# ---------------------------------------------------------------------------
+_SERVE_MESH_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import repro
+    from repro.configs import get_config
+    from repro.serve import Request
+
+    cfg = get_config("qwen2.5-14b", smoke=True)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, int(rng.integers(4, 17)))
+               for _ in range(6)]
+
+    def run(mesh):
+        exe = repro.compile(cfg, repro.CompileOptions(
+            target="engine", mesh=mesh))
+        sched = repro.serve(exe, repro.SchedulerOptions(
+            slots=4, max_len=64))
+        for i, p in enumerate(prompts):
+            sched.submit(Request(uid=i, prompt=p, max_new_tokens=8))
+        done = sched.run()
+        summary = sched.summary()
+        sched.shutdown()
+        return {c.uid: list(c.tokens) for c in done}, summary
+
+    ref, ref_summary = run(None)
+    assert "sharding" not in ref_summary        # unsharded: no mesh block
+    got, summary = run("data=2,model=2")
+    assert got == ref, (ref, got)
+
+    sh = summary["sharding"]
+    assert sh["mesh"] == "data=2,model=2" and sh["devices"] == 4
+    assert sh["decode_programs"] >= 1
+    # per-axis collective attribution from the post-optimization HLO
+    per = sh["collectives"]["per_axis"]
+    assert set(per) <= {"data", "model"} and per, per
+    assert all(v["count"] >= 1 and v["bytes"] > 0 for v in per.values())
+    assert summary["faults"] == []
+    print("MESH_TOKENS_OK")
+""")
+
+
+def test_serve_data_model_mesh_tokens_identical_8dev():
+    """The acceptance check: a 2×2 data×model serve run on virtual
+    devices produces exactly the tokens of the single-device scheduler,
+    and summary() gains per-axis collective counts + bytes."""
+    out = subprocess.run(
+        [sys.executable, "-c", _SERVE_MESH_SCRIPT],
+        capture_output=True, text=True, cwd=".", timeout=900)
+    assert "MESH_TOKENS_OK" in out.stdout, out.stdout + out.stderr
+
+
+# ---------------------------------------------------------------------------
+# serialize() round-trips mesh + shardings cross-process, warm cache
+# ---------------------------------------------------------------------------
+_SAVE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import repro
+    from repro.core import ModelBuilder
+
+    mb = ModelBuilder().seed(11)
+    x = mb.input((16,))
+    h = mb.dense(x, 32, activation="relu")
+    h = mb.dense(h, 16)
+    g = mb.build([h])
+
+    exe = repro.compile(g, repro.CompileOptions(mesh="data=2,model=2"))
+    xs = np.random.default_rng(0).standard_normal((4, 16)).astype("float32")
+    out = exe(xs)
+    np.save(os.environ["SHARD_REF"], np.asarray(out[list(out)[0]]))
+    with open(os.environ["SHARD_ART"], "wb") as f:
+        f.write(exe.serialize())
+    info = exe.cache_info()
+    assert info["misses"] >= 1, info       # cold cache: compiled + stored
+    print("SAVE_OK")
+""")
+
+_LOAD_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import numpy as np
+    import repro
+    from repro.dist import ShardedExecutable
+
+    with open(os.environ["SHARD_ART"], "rb") as f:
+        exe = repro.deserialize(f.read())
+    assert isinstance(exe, ShardedExecutable)
+    assert exe.mesh_spec.describe() == "data=2,model=2"
+    # placement was replayed from the manifest, not re-derived
+    assert exe.graph.dist["shardings"] and exe.graph.dist["edits"]["inserted"]
+
+    xs = np.random.default_rng(0).standard_normal((4, 16)).astype("float32")
+    out = exe(xs)
+    ref = np.load(os.environ["SHARD_REF"])
+    np.testing.assert_array_equal(np.asarray(out[list(out)[0]]), ref)
+    info = exe.cache_info()
+    assert info["hits"] >= 1 and info["misses"] == 0, info
+    print("LOAD_OK")
+""")
+
+
+def test_sharded_serialize_roundtrip_cross_process(tmp_path):
+    """Process A compiles on a 2×2 mesh, executes, serializes; process B
+    deserializes and replays the placement with zero re-propagation —
+    same cache key, so the warm executable cache hits with 0 recompiles
+    (misses == 0) and the outputs match bit for bit."""
+    env = {**os.environ,
+           "REPRO_CACHE_DIR": str(tmp_path / "cache"),
+           "SHARD_ART": str(tmp_path / "model.rx"),
+           "SHARD_REF": str(tmp_path / "ref.npy")}
+    save = subprocess.run([sys.executable, "-c", _SAVE_SCRIPT], env=env,
+                          capture_output=True, text=True, cwd=".",
+                          timeout=900)
+    assert "SAVE_OK" in save.stdout, save.stdout + save.stderr
+    load = subprocess.run([sys.executable, "-c", _LOAD_SCRIPT], env=env,
+                          capture_output=True, text=True, cwd=".",
+                          timeout=900)
+    assert "LOAD_OK" in load.stdout, load.stdout + load.stderr
