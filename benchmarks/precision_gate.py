@@ -1,0 +1,208 @@
+"""CI precision gate + baseline reseeding for the quantized path.
+
+Gate mode — compare a fresh ``table1 --precision int8`` artifact
+against the checked-in precision baseline and fail on regression::
+
+    PYTHONPATH=src python -m benchmarks.precision_gate PRECISION_pr.json \
+        benchmarks/artifacts/precision_baseline.json --max-regression 0.25
+
+Two contracts are enforced, the speed half and the accuracy half:
+
+* ``quant_speedup`` — the int8-vs-f32 **pallas ratio** from the same
+  process (both rows share the machine, so the ratio transfers between
+  the box that seeded the baseline and the CI runner).  A drop of more
+  than ``--max-regression`` below the baseline floor fails: that means
+  the int8 lowering fell off the specialized kernel, the quantize pass
+  stopped annotating, or the dequant epilogue stopped fusing.
+* ``quant_max_abs_err`` — the int8 output vs the f32 oracle must stay
+  within the default precision budget (``--err-budget``, 0.05 — the
+  same ``DEFAULT_PRECISION_BUDGET`` the mixed-mode tuner enforces).
+  Calibration drift or a broken scale round trip shows up here.
+
+Reseed mode — regenerate the baseline as min-over-N, the same
+estimator-of-estimators discipline as ``perf_gate --reseed``::
+
+    PYTHONPATH=src python -m benchmarks.precision_gate --reseed 10 \
+        --configs C-HTWK C-BH --reps 50
+
+Every run (gate or reseed) appends to the shared perf trajectory at
+``benchmarks/artifacts/trajectory/`` via :func:`perf_gate.append_trajectory`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .perf_gate import TRAJECTORY_DIR, append_trajectory
+
+# Same ceiling the quantize pass's mixed-mode tuner enforces per site
+# (DEFAULT_PRECISION_BUDGET): int8 end-to-end error must stay inside it.
+ERR_BUDGET = 0.05
+
+
+def gate(current: dict, baseline: dict, max_regression: float,
+         err_budget: float = ERR_BUDGET) -> list:
+    """Failures list.  The gated speed metric is ``quant_speedup`` (the
+    int8/f32 pallas ratio of the *current* rows vs the baseline floor);
+    the gated accuracy metric is ``quant_max_abs_err`` vs the budget."""
+    failures = []
+    for name, base in baseline["rows"].items():
+        cur = current["rows"].get(name)
+        if cur is None:
+            failures.append(f"{name}: missing from current run")
+            continue
+        if "quant_speedup" not in cur:
+            failures.append(f"{name}: no 'quant_speedup' in current run "
+                            "(was table1 run with --precision int8?)")
+            continue
+        floor = base["quant_speedup"] * (1.0 - max_regression)
+        ok_speed = cur["quant_speedup"] >= floor
+        ok_err = cur["quant_max_abs_err"] <= err_budget
+        verdict = "OK" if (ok_speed and ok_err) else "REGRESSION"
+        print(f"[precision-gate] {name:<12} int8/f32 "
+              f"{cur['quant_speedup']:5.2f}x "
+              f"(baseline {base['quant_speedup']:5.2f}x, "
+              f"floor {floor:5.2f}x) "
+              f"err {cur['quant_max_abs_err']:.2e} "
+              f"(budget {err_budget:.0e})  {verdict}")
+        if not ok_speed:
+            failures.append(
+                f"{name}: int8 speedup {cur['quant_speedup']:.2f}x fell "
+                f"more than {max_regression:.0%} below baseline "
+                f"{base['quant_speedup']:.2f}x")
+        if not ok_err:
+            failures.append(
+                f"{name}: quant_max_abs_err {cur['quant_max_abs_err']:.2e} "
+                f"exceeds the {err_budget:.0e} precision budget")
+    return failures
+
+
+def reseed(n: int, reps: int, configs, out_path: str, calibrate: int = 4,
+           trajectory_dir=TRAJECTORY_DIR) -> dict:
+    """Min-over-N baseline: run ``table1 --precision int8`` N times and
+    floor each config at its minimum int8/f32 speedup."""
+    import jax
+    import platform
+
+    from .table1 import run as run_table1
+
+    all_rows = []
+    for i in range(n):
+        rows = run_table1(reps=reps, configs=configs,
+                          precision="int8", calibrate=calibrate)
+        all_rows.append(rows)
+        line = ", ".join(f"{name}: {r['quant_speedup']:.2f}x "
+                         f"(err {r['quant_max_abs_err']:.1e})"
+                         for name, r in rows.items())
+        print(f"[reseed] run {i + 1}/{n}: {line}")
+        append_trajectory({"bench": "table1", "precision": "int8",
+                           "mode": "reseed", "run": i + 1, "of": n,
+                           "rows": rows}, trajectory_dir)
+
+    baseline_rows = {}
+    for name in all_rows[0]:
+        runs = [rows[name] for rows in all_rows]
+        floor = min(runs, key=lambda r: r["quant_speedup"])
+        baseline_rows[name] = {
+            **floor, "quant_speedup": round(floor["quant_speedup"], 2)}
+    doc = {
+        "bench": "table1",
+        "precision": "int8",
+        "calibrate": calibrate,
+        "rows": baseline_rows,
+        "env": {
+            "jax": jax.__version__,
+            "backend": jax.default_backend(),
+            "python": platform.python_version(),
+            "machine": platform.machine(),
+        },
+        "note": (f"seeded by `python -m benchmarks.precision_gate "
+                 f"--reseed {n}` as the per-config MINIMUM int8/f32 "
+                 f"pallas speedup over {n} runs (reps={reps}, min-of-reps "
+                 "estimator); the gate allows a further fractional drop, "
+                 "so only a structural regression — the int8 lowering "
+                 "falling back to f32, the dequant epilogue unfusing — "
+                 "trips it"),
+    }
+    with open(out_path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"[reseed] wrote {out_path}")
+    return doc
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", nargs="?",
+                    help="fresh PRECISION_*.json from this run (gate mode)")
+    ap.add_argument("baseline", nargs="?",
+                    default="benchmarks/artifacts/precision_baseline.json",
+                    help="checked-in precision_baseline.json")
+    ap.add_argument("--max-regression", type=float, default=0.25,
+                    help="allowed fractional int8-speedup drop "
+                         "(default 0.25)")
+    ap.add_argument("--err-budget", type=float, default=ERR_BUDGET,
+                    help="int8 max_abs_err ceiling vs the f32 oracle "
+                         f"(default {ERR_BUDGET}, the pass's "
+                         "DEFAULT_PRECISION_BUDGET)")
+    ap.add_argument("--reseed", type=int, metavar="N",
+                    help="regenerate the baseline as min-over-N "
+                         "`table1 --precision int8` runs instead of gating")
+    ap.add_argument("--configs", nargs="*", metavar="NAME",
+                    help="configs for --reseed (default: the CI bench-smoke "
+                         "pair, C-HTWK C-BH)")
+    ap.add_argument("--reps", type=int, default=50,
+                    help="table1 reps per --reseed run (default 50)")
+    ap.add_argument("--calibrate", type=int, default=4,
+                    help="calibration batches for --reseed (default 4, "
+                         "matching the CI invocation)")
+    ap.add_argument("--out",
+                    default="benchmarks/artifacts/precision_baseline.json",
+                    help="where --reseed writes the new baseline")
+    ap.add_argument("--trajectory-dir", default=TRAJECTORY_DIR,
+                    help="perf-trajectory directory (default "
+                         "benchmarks/artifacts/trajectory)")
+    ap.add_argument("--no-trajectory", action="store_true",
+                    help="do not append this run to the trajectory")
+    args = ap.parse_args(argv)
+
+    if args.reseed is not None:
+        if args.reseed < 1:
+            ap.error("--reseed must be >= 1")
+        configs = args.configs if args.configs else ["C-HTWK", "C-BH"]
+        reseed(args.reseed, args.reps, configs, args.out, args.calibrate,
+               None if args.no_trajectory else args.trajectory_dir)
+        return 0
+
+    if not args.current:
+        ap.error("gate mode needs a current PRECISION_*.json "
+                 "(or use --reseed N)")
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = gate(current, baseline, args.max_regression, args.err_budget)
+    if not args.no_trajectory:
+        append_trajectory({
+            **current,
+            "gate": {
+                "baseline": args.baseline,
+                "kind": "precision",
+                "max_regression": args.max_regression,
+                "err_budget": args.err_budget,
+                "verdict": "fail" if failures else "ok",
+                "failures": failures,
+            },
+        }, args.trajectory_dir)
+    if failures:
+        for msg in failures:
+            print(f"[precision-gate] FAIL: {msg}", file=sys.stderr)
+        return 1
+    print("[precision-gate] OK — quantized path holds")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -60,7 +60,9 @@ def _active_decisions(exe) -> Optional[Dict]:
 def run(reps: int = 20,
         configs: Optional[Sequence[str]] = None,
         autotune: bool = False,
-        autotune_budget_ms: float = 250.0
+        autotune_budget_ms: float = 250.0,
+        precision: Optional[str] = None,
+        calibrate: Optional[int] = None,
         ) -> Dict[str, Dict[str, float]]:
     if configs:
         unknown = sorted(set(configs) - set(SUITE))
@@ -103,6 +105,31 @@ def run(reps: int = 20,
             "compile_time_ms": (exe.compile_time or 0) * 1e3,
             "max_abs_err": err,
         }
+
+        if precision:
+            # Low-precision row pair: the f32 pallas path vs the same
+            # target compiled at --precision, same estimator and reps —
+            # the precision gate consumes this speedup ratio, and the
+            # error column is measured against the f32 oracle output.
+            pal = repro.compile(g, repro.CompileOptions(target="pallas"))
+            fn_p = pal.ensure_compiled(batch_size=1)
+            t_pal = _time_call(lambda x=x: fn_p(x), reps=reps)
+
+            q = repro.compile(g, repro.CompileOptions(
+                target="pallas", precision=precision, calibrate=calibrate))
+            fn_q = q.ensure_compiled(batch_size=1)
+            t_q = _time_call(lambda x=x: fn_q(x), reps=reps)
+
+            q_out = np.asarray(q(**{in_name: x})[out_name])
+            q_err = float(np.max(np.abs(want - q_out)))
+            rows[name].update({
+                "precision": precision,
+                "f32_pallas_ms": t_pal * 1e3,
+                "quant_ms": t_q * 1e3,
+                "quant_speedup": t_pal / t_q,
+                "quant_max_abs_err": q_err,
+                "quant_decisions": q.cost_summary().get("quant"),
+            })
 
         if autotune:
             # Both pallas modes side by side: the heuristic selector's
@@ -151,6 +178,13 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
                     help="per-compile measurement budget for --autotune "
                          "(default 250); set $REPRO_CACHE_DIR to persist "
                          "tactics across runs")
+    ap.add_argument("--precision", choices=("bf16", "int8", "mixed"),
+                    help="also compile the pallas target at this "
+                         "precision and report it against the f32 pallas "
+                         "path (speedup + max_abs_err vs the f32 oracle)")
+    ap.add_argument("--calibrate", type=int, default=None, metavar="N",
+                    help="calibration sample batches for --precision "
+                         "(default: the quantize pass's default, 4)")
     ap.add_argument("--json", metavar="PATH",
                     help="also write rows + environment as a BENCH_*.json "
                          "artifact (the CI perf-trajectory format)")
@@ -158,11 +192,15 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
 
     rows = run(reps=args.reps, configs=args.configs,
                autotune=args.autotune,
-               autotune_budget_ms=args.autotune_budget_ms)
+               autotune_budget_ms=args.autotune_budget_ms,
+               precision=args.precision, calibrate=args.calibrate)
     hdr = f"{'model':<12} {'interp ms':>10} {'compiled ms':>12} " \
           f"{'speedup':>8} {'compile ms':>11} {'max err':>9}"
     if args.autotune:
         hdr += f" {'pallas ms':>10} {'tuned ms':>9} {'tuned x':>8}"
+    if args.precision:
+        hdr += f" {'f32 ms':>8} {args.precision + ' ms':>9} " \
+               f"{'q-x':>6} {'q-err':>9}"
     print(hdr)
     print("-" * len(hdr))
     for name, r in rows.items():
@@ -173,11 +211,16 @@ def main(argv: Optional[Sequence[str]] = None) -> None:
             line += (f" {r['pallas_heuristic_ms']:>10.3f} "
                      f"{r['pallas_autotuned_ms']:>9.3f} "
                      f"{r['autotune_speedup']:>8.1f}")
+        if args.precision:
+            line += (f" {r['f32_pallas_ms']:>8.3f} {r['quant_ms']:>9.3f} "
+                     f"{r['quant_speedup']:>6.2f} "
+                     f"{r['quant_max_abs_err']:>9.2e}")
         print(line)
     if args.json:
         doc = {
             "bench": "table1",
             "autotune": bool(args.autotune),
+            "precision": args.precision,
             "rows": rows,
             "env": {
                 "jax": jax.__version__,

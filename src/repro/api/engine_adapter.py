@@ -43,6 +43,32 @@ class ModelExecutable(Executable):
         self.options = options
         if params is None:
             params = self.model.init(jax.random.PRNGKey(init_seed))
+        # Low-precision serving: the graph quantize pass does not route
+        # through framework-scale models, so the engine target supports
+        # the storage-level subset — a weight-only bf16 cast (matmuls
+        # upcast per JAX promotion, activations and KV stay f32).
+        # Calibrated int8 needs the graph pipeline and is rejected here
+        # rather than silently served at full precision.
+        self.quant_report: Optional[dict] = None
+        if options.precision in ("int8", "mixed"):
+            raise ValueError(
+                f"precision={options.precision!r} is not supported by "
+                "the 'engine' target: calibrated int8 routes through "
+                "the graph quantize pass, which framework-scale models "
+                "bypass — use precision='bf16' (weight-only storage "
+                "cast) for served models")
+        if options.precision == "bf16":
+            leaves, treedef = jax.tree_util.tree_flatten(params)
+            cast = [l.astype(jnp.bfloat16)
+                    if getattr(l, "dtype", None) == jnp.float32 else l
+                    for l in leaves]
+            n_bf16 = sum(1 for l in cast
+                         if getattr(l, "dtype", None) == jnp.bfloat16)
+            params = jax.tree_util.tree_unflatten(treedef, cast)
+            self.quant_report = {
+                "mode": "bf16",
+                "decisions": {"bf16": n_bf16,
+                              "f32": len(leaves) - n_bf16}}
         self.params = params
         self.compile_time: Optional[float] = None
         self._fwd = jax.jit(lambda p, b: self.model.forward(p, b)[0])
@@ -83,7 +109,7 @@ class ModelExecutable(Executable):
         """Model-level cost facts: parameter count and byte footprint
         (engine executables have no pass pipeline to report)."""
         leaves = jax.tree_util.tree_leaves(self.params)
-        return {
+        out = {
             "target": "engine",
             "arch": self.cfg.name,
             "family": self.cfg.family,
@@ -91,6 +117,9 @@ class ModelExecutable(Executable):
             "param_bytes": int(sum(l.size * l.dtype.itemsize
                                    for l in leaves)),
         }
+        if self.quant_report is not None:
+            out["quant"] = dict(self.quant_report)
+        return out
 
     def serialize(self) -> bytes:
         """Pack cfg + param leaves into the portable artifact format."""

@@ -15,7 +15,11 @@ from typing import Optional, Tuple
 from ..dist.mesh import MeshSpec
 from ..runtime.buckets import BucketPolicy
 
-PRECISIONS = ("exact", "fast")
+PRECISIONS = ("exact", "fast", "f32", "bf16", "int8", "mixed")
+#: Precision names that request the calibration-driven quantize pass
+#: (``repro.core.passes.quantize``).  ``"f32"`` is in the family for
+#: symmetry but compiles bit-identically to ``"exact"``.
+QUANT_PRECISIONS = ("f32", "bf16", "int8", "mixed")
 AUTOTUNE_MODES = ("off", "cached", "full")
 
 
@@ -41,7 +45,28 @@ class CompileOptions:
                    ``"interpret"`` (SimpleNN oracle semantics), ``"jit"``
                    (optimized jaxpr path), ``"pallas"`` (fused kernels),
                    ``"engine"`` (framework-scale Model/Engine adapter).
-    precision:     ``"exact"`` or ``"fast"`` (paper §3.4 approximations).
+    precision:     numeric contract of the compiled program.
+                   ``"exact"`` (default) and ``"fast"`` (paper §3.4
+                   approximate activations) are the f32 pipelines.
+                   The low-precision family routes through the
+                   calibration-driven quantize pass: ``"f32"``
+                   (explicit full precision — bit-identical to
+                   ``"exact"``), ``"bf16"`` (operands cast to bfloat16,
+                   f32 accumulation), ``"int8"`` (calibrated symmetric
+                   int8 compute with f32 dequant epilogues), and
+                   ``"mixed"`` (the autotuner picks f32/bf16/int8 per
+                   site, measured under the autotune budget and
+                   constrained by ``precision_budget``).
+    calibrate:     number of seeded sample batches the quantize pass
+                   runs through the interpret-target oracle to record
+                   per-tensor abs-max activation ranges.  ``None``
+                   defaults to 4 when a quantizing precision is
+                   selected; ignored otherwise.
+    precision_budget: accuracy budget (max_abs_err vs the f32
+                   calibration outputs) that ``"mixed"`` tactic
+                   selection must hold per site; sites whose int8/bf16
+                   candidates exceed it stay f32.  ``None`` = the
+                   default budget (0.05).
     embed_weights: close over weights as XLA constants (paper-faithful)
                    vs. pass them as an argument (program reusable across
                    checkpoints).
@@ -114,6 +139,8 @@ class CompileOptions:
 
     target: str = "jit"
     precision: str = "exact"
+    calibrate: Optional[int] = None
+    precision_budget: Optional[float] = None
     embed_weights: bool = True
     passes: Optional[Tuple[str, ...]] = None
     batch_buckets: Tuple[int, ...] = ()
@@ -132,6 +159,14 @@ class CompileOptions:
             raise ValueError(
                 f"precision must be one of {PRECISIONS}, got {self.precision!r}"
             )
+        if self.calibrate is not None and int(self.calibrate) <= 0:
+            raise ValueError(
+                f"calibrate must be a positive batch count or None, "
+                f"got {self.calibrate!r}")
+        if self.precision_budget is not None and self.precision_budget <= 0:
+            raise ValueError(
+                f"precision_budget must be a positive max_abs_err or "
+                f"None, got {self.precision_budget!r}")
         if self.autotune not in AUTOTUNE_MODES:
             raise ValueError(
                 f"autotune must be one of {AUTOTUNE_MODES}, "

@@ -25,6 +25,27 @@ _SERVE_HINT = (
 )
 
 
+def _precision_report(executable) -> Optional[dict]:
+    """Audit record for ``Scheduler.summary()["precision"]``: the
+    compiled precision, the calibration setting, and — when the
+    executable reports one — the per-site f32/bf16/int8 decision counts
+    from its quantization report."""
+    opts = getattr(executable, "options", None)
+    prec = getattr(opts, "precision", None)
+    if prec is None:
+        return None
+    info = {"precision": prec}
+    if getattr(opts, "calibrate", None) is not None:
+        info["calibrate"] = opts.calibrate
+    try:
+        quant = executable.cost_summary().get("quant")
+    except Exception:
+        quant = None
+    if quant and quant.get("decisions"):
+        info["decisions"] = dict(quant["decisions"])
+    return info
+
+
 def serve(executable, options: Optional[SchedulerOptions] = None, *,
           sampler: Optional[Callable] = None,
           clock: Optional[Callable[[], float]] = None,
@@ -66,4 +87,7 @@ def serve(executable, options: Optional[SchedulerOptions] = None, *,
         extra["engine_worker"] = engine_worker
     if device_source is not None:
         extra["device_source"] = device_source
+    info = _precision_report(executable)
+    if info is not None:
+        extra["precision_info"] = info
     return Scheduler(model, params, options, sampler=sampler, **extra)

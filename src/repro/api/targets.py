@@ -38,7 +38,27 @@ from ..core.selection import KernelChoice, select_kernels
 from ..core.simple import SimpleNN
 from .cache import cache_key, open_cache
 from .executable import Executable, pack
-from .options import CompileOptions
+from .options import QUANT_PRECISIONS, CompileOptions
+
+
+def _quant_request(options: CompileOptions, *, measure: bool) -> Optional[dict]:
+    """The quantization request a target rides on ``graph.quant`` for
+    the quantize pass (None when ``options.precision`` is not a
+    quantizing mode).  ``measure`` gates mixed-mode micro-benchmarks —
+    the eager interpret target never measures; it reuses cached
+    decisions so a jit-compile with the same cache dir stays the
+    source of truth."""
+    if options.precision not in QUANT_PRECISIONS \
+            or options.precision == "f32":
+        return None
+    req = {"mode": options.precision,
+           "calibrate": options.calibrate,
+           "budget": options.precision_budget,
+           "budget_ms": options.autotune_budget_ms,
+           "cache_dir": options.cache_dir}
+    req = {k: v for k, v in req.items() if v is not None}
+    req["measure"] = measure and options.autotune != "cached"
+    return req
 
 TargetFactory = Callable[[Graph, CompileOptions], Executable]
 
@@ -137,7 +157,18 @@ class InterpretExecutable(GraphExecutable):
     def __init__(self, graph: Graph, options: CompileOptions) -> None:
         super().__init__(graph, options)
         t0 = time.perf_counter()
-        self._nn = SimpleNN(graph)
+        # Low-precision modes change the *semantics*, not just the
+        # compilation strategy, so even the oracle honors them: run the
+        # quantize pass alone (no fusion/layout — this target stays the
+        # unoptimized reference) and interpret the annotated graph.
+        nn_graph = graph
+        self._quant_report: Optional[dict] = None
+        req = _quant_request(options, measure=False)
+        if req is not None:
+            qg = graph.copy()
+            qg.quant = req
+            nn_graph, self._quant_report = run_pipeline(qg, ("quantize",))
+        self._nn = SimpleNN(nn_graph)
         self.compile_time = time.perf_counter() - t0
 
     def __call__(self, *pos, **inputs):
@@ -146,14 +177,18 @@ class InterpretExecutable(GraphExecutable):
             self._nn(**dict(zip(self.source.inputs, args))))
 
     def cost_summary(self):
-        """Source-graph counts only — the interpreter runs no passes."""
-        return {
+        """Source-graph counts only — the interpreter runs no passes
+        (plus the quantization decision record under low precision)."""
+        out = {
             "target": self.options.target,
             "nodes": len(self.source.nodes),
             "params": len(self.source.params),
             "param_bytes": int(sum(v.nbytes
                                    for v in self.source.params.values())),
         }
+        if self._nn.graph.quant:
+            out["quant"] = dict(self._nn.graph.quant)
+        return out
 
 
 class JitExecutable(GraphExecutable):
@@ -201,6 +236,16 @@ class JitExecutable(GraphExecutable):
                     mode=options.autotune,
                     budget_ms=options.autotune_budget_ms,
                     cache=open_tactic_cache(options.cache_dir)))
+        # Low-precision request for the quantize pass: attached to a
+        # copy (self.source stays the untouched input graph); the pass
+        # consumes the request and leaves only the semantic record —
+        # mode + quant.* node attrs — which flow into structure_hash()
+        # and therefore the executable cache key for free.
+        req = _quant_request(options, measure=True)
+        if req is not None:
+            if effective_graph is graph:
+                effective_graph = graph.copy()
+            effective_graph.quant = req
         dump_ir = options.dump_ir
         if self._capture is not None:
             from ..core.passes.manager import _resolve_dump_ir
@@ -481,6 +526,10 @@ class JitExecutable(GraphExecutable):
             out["graph_decisions"] = {
                 k: v for k, v in self._decisions_report.items()
                 if k != "entries"}
+        if self.graph.quant:
+            # Quantization record: mode + per-precision site counts
+            # (the quantize pass's decisions, measured or prior).
+            out["quant"] = dict(self.graph.quant)
         if self._xla_cost:
             out["xla"] = {k: self._xla_cost[k]
                           for k in ("flops", "bytes accessed")

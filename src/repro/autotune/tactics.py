@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels.tiles import LANE, enumerate_blocks
-from ..kernels.fused_matmul.ops import fused_matmul
+from ..kernels.fused_matmul.ops import fused_matmul, fused_matmul_q8
 from ..kernels.fast_act.ops import fast_act
 from ..kernels.fast_act import ref as fast_ref
 from ..kernels.decode_attention.ops import decode_attention
@@ -102,11 +102,17 @@ def _dense_tactics(node, graph, in_spec, batch_size: int,
     has_bias = "bias" in node.params
     has_affine = node.epilogue_attrs.get("post_affine") is not None
     fast = precision == "fast"
-    itemsize = int(np.dtype(in_spec.dtype).itemsize)
+    # quant.* annotations define the numerics class of this site, so
+    # they join the tactic key (an int8 site must never share timings —
+    # or a winner — with the f32 version of the same shape) and pick
+    # which kernel family the candidates come from.
+    qm = node.attrs.get("quant.mode") or ""
+    itemsize = ({"int8": 1, "bf16": 2}.get(qm)
+                or int(np.dtype(in_spec.dtype).itemsize))
     desc = {"op": "dense", "m": m, "k": k, "n": n, "dtype": in_spec.dtype,
             "batch": batch_size, "target": "pallas", "epilogue": fn or "",
             "has_bias": has_bias, "has_affine": has_affine,
-            "w_layout": layout, "fast": fast}
+            "w_layout": layout, "fast": fast, "quant": qm}
 
     def make() -> List[Candidate]:
         rng = np.random.default_rng(0)
@@ -117,15 +123,39 @@ def _dense_tactics(node, graph, in_spec, batch_size: int,
         s = _rng_array(rng, (n,)) if has_affine else None
         o = _rng_array(rng, (n,)) if has_affine else None
 
-        def runner(use_pallas: bool, block):
-            return jax.jit(functools.partial(
-                fused_matmul, fn=fn, fast=fast, w_layout=layout,
-                use_pallas=use_pallas, block=block))
+        if qm == "int8":
+            # Measure with the node's calibrated scales: dequantized
+            # magnitudes (and therefore any clamp behavior) match the
+            # real site, and the tactic cache entry describes the same
+            # compiled program the lowering will emit.
+            ws = np.asarray(node.attrs["quant.w_scale"], dtype=np.float32)
+            if ws.shape[0] < n:
+                ws = np.pad(ws, (0, n - ws.shape[0]), constant_values=1.0)
+
+            def runner(use_pallas: bool, block):
+                return jax.jit(functools.partial(
+                    fused_matmul_q8,
+                    x_scale=node.attrs["quant.x_scale"], w_scales=ws,
+                    fn=fn, fast=fast, w_layout=layout,
+                    use_pallas=use_pallas, block=block))
+
+            pallas_kernel = "pallas.fused_matmul_q8"
+        else:
+            if qm == "bf16":
+                x = x.astype(jnp.bfloat16)
+                w = w.astype(jnp.bfloat16)
+
+            def runner(use_pallas: bool, block):
+                return jax.jit(functools.partial(
+                    fused_matmul, fn=fn, fast=fast, w_layout=layout,
+                    use_pallas=use_pallas, block=block))
+
+            pallas_kernel = "pallas.fused_matmul"
 
         cands: List[Candidate] = [
             (Tactic("lax.dot"), runner(False, None), (x, w, b, s, o))]
         for blk in enumerate_blocks(m, k, n, itemsize):
-            cands.append((Tactic("pallas.fused_matmul", blk),
+            cands.append((Tactic(pallas_kernel, blk),
                           runner(True, blk), (x, w, b, s, o)))
         return cands
 

@@ -256,6 +256,13 @@ class Graph:
         # structure_hash() only when set, so unsharded hashes (and
         # every existing cache key) are unchanged.
         self.dist: Optional[Dict[str, Any]] = None
+        # Quantization request (repro.core.passes.quantize): {"mode",
+        # "calibrate", "budget", ...} set by a low-precision compile;
+        # the pass consumes it and annotates nodes with quant.* attrs.
+        # Same contract as `dist`: None = full precision, mixed into
+        # structure_hash() only when set so f32 cache keys are
+        # unchanged.
+        self.quant: Optional[Dict[str, Any]] = None
 
     # -- construction -------------------------------------------------
     def add_input(self, name: str, shape: Sequence[int], dtype: str = "float32") -> str:
@@ -519,6 +526,8 @@ class Graph:
         }
         if self.dist:
             payload["dist"] = self.dist
+        if self.quant:
+            payload["quant"] = self.quant
         blob = json.dumps(payload, sort_keys=True, default=str).encode()
         return hashlib.sha256(blob).hexdigest()
 
@@ -548,6 +557,9 @@ class Graph:
         if self.dist is not None:
             import copy as _copy
             g.dist = _copy.deepcopy(self.dist)
+        if self.quant is not None:
+            import copy as _copy
+            g.quant = _copy.deepcopy(self.quant)
         return g
 
     def summary(self) -> str:

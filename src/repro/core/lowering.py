@@ -32,13 +32,15 @@ from typing import Callable, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .graph import Graph, Node
 from .ops_common import (apply_activation, fast_activation, lax_padding,
                          pool_padding)
+from ..kernels import qmath
 from ..kernels.decode_attention.ops import decode_attention as decode_attention_op
 from ..kernels.fast_act.ops import fast_act
-from ..kernels.fused_matmul.ops import fused_matmul
+from ..kernels.fused_matmul.ops import fused_matmul, fused_matmul_q8
 
 
 class UnsupportedOpError(NotImplementedError):
@@ -325,15 +327,40 @@ def _dense_impl(node, ins, ctx, use_pallas: bool, block=None):
     fn = node.epilogue if node.epilogue not in (None, "linear") else None
     if fn == "softmax":
         fn = None  # handled below (two-pass, not fusable in-kernel)
-    y = fused_matmul(
-        ins[0], w, b, scale, offset,
-        fn=fn,
-        fast=ctx.precision == "fast",
-        w_layout=layout,
-        use_pallas=use_pallas,
-        block=block,
-        attrs=node.epilogue_attrs,
-    )
+    qm = node.attrs.get("quant.mode")
+    if qm == "int8":
+        # quant.w_scale is per *logical* out channel (the pass runs
+        # pre-layout); the layout pass may have padded the kernel to a
+        # LANE multiple afterwards.  Padded channels are zero, so any
+        # scale works — pad with 1.0 to the physical width.
+        ws = np.asarray(node.attrs["quant.w_scale"], dtype=np.float32)
+        pn = w.shape[1] if layout == "io" else w.shape[0]
+        if ws.shape[0] < pn:
+            ws = np.pad(ws, (0, pn - ws.shape[0]), constant_values=1.0)
+        y = fused_matmul_q8(
+            ins[0], w, b, scale, offset,
+            x_scale=node.attrs["quant.x_scale"],
+            w_scales=ws,
+            fn=fn,
+            fast=ctx.precision == "fast",
+            w_layout=layout,
+            use_pallas=use_pallas,
+            block=block,
+            attrs=node.epilogue_attrs,
+        )
+    else:
+        x = ins[0]
+        if qm == "bf16":
+            x, w = qmath.bf16_cast_pair(x, w)
+        y = fused_matmul(
+            x, w, b, scale, offset,
+            fn=fn,
+            fast=ctx.precision == "fast",
+            w_layout=layout,
+            use_pallas=use_pallas,
+            block=block,
+            attrs=node.epilogue_attrs,
+        )
     if "orig_cout" in node.attrs:
         y = y[..., : node.attrs["orig_cout"]]
     if node.epilogue == "softmax":
@@ -349,12 +376,25 @@ def _lower_dense(node, ins, ctx):
 @register_lowering("conv2d")
 def _lower_conv2d(node, ins, ctx):
     k = ctx.params[node.params["kernel"]]
-    y = jax.lax.conv_general_dilated(
-        ins[0], k,
-        window_strides=node.attrs["strides"],
-        padding=lax_padding(node.attrs["padding"]),
-        dimension_numbers=("NHWC", "HWIO", "NHWC"),
-    )
+    qm = node.attrs.get("quant.mode")
+    if qm == "int8":
+        y = qmath.conv2d_q8(
+            ins[0], k,
+            node.attrs["quant.x_scale"], node.attrs["quant.w_scale"],
+            strides=node.attrs["strides"],
+            padding=lax_padding(node.attrs["padding"]))
+    elif qm == "bf16":
+        y = qmath.conv2d_bf16(
+            ins[0], k,
+            strides=node.attrs["strides"],
+            padding=lax_padding(node.attrs["padding"]))
+    else:
+        y = jax.lax.conv_general_dilated(
+            ins[0], k,
+            window_strides=node.attrs["strides"],
+            padding=lax_padding(node.attrs["padding"]),
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
     if "bias" in node.params:
         y = y + ctx.params[node.params["bias"]]
     return ctx.epilogue(node, y)
@@ -491,8 +531,11 @@ def _lower_decode_attention(node, ins, ctx):
 # ---------------------------------------------------------------------------
 @register_lowering("dense", target="pallas")
 def _lower_dense_pallas(node, ins, ctx):
+    kernel = ("pallas.fused_matmul_q8"
+              if node.attrs.get("quant.mode") == "int8"
+              else "pallas.fused_matmul")
     return _dense_impl(node, ins, ctx,
-                       use_pallas=ctx.wants(node, "pallas.fused_matmul"),
+                       use_pallas=ctx.wants(node, kernel),
                        block=ctx.tuned_block(node))
 
 

@@ -20,8 +20,11 @@ The default pipeline mirrors the paper's intermediate processing
 4. fuse_activation        — activations become epilogues of producers (§3.4)
 5. fold_batchnorm         — BN folded into adjacent conv/dense (§3.5)
 6. fuse_activation.post_bn — rerun: BN removal exposes new conv→act pairs
-7. optimize_layout        — compile-time weight re-layout (Eq. 3 analogue) (§3.3)
-8. propagate_sharding     — per-tensor PartitionSpecs + collectives
+7. quantize               — calibration-driven int8/bf16 annotation
+                            (reads the request on ``graph.quant``;
+                            no-op without one)
+8. optimize_layout        — compile-time weight re-layout (Eq. 3 analogue) (§3.3)
+9. propagate_sharding     — per-tensor PartitionSpecs + collectives
                             (repro.dist); no-op without a mesh
 
 followed by ``plan_memory`` (lifetime analysis + arena assignment,
@@ -56,6 +59,12 @@ from .memory_plan import MemoryPlan, plan_memory
 # stays "fuse_activation" so ablations remove both at once).
 register_pass("fuse_activation.post_bn", after=("fold_batchnorm",),
               before=("optimize_layout",))(fuse_activation)
+
+# Quantization reads the request on ``graph.quant`` and must calibrate
+# against the fully fused/folded weights, so it registers between the
+# post-BN fusion rerun and layout (imported here, after the
+# ``fuse_activation.post_bn`` instance it orders against exists).
+from .quantize import quantize
 
 # Distribution: resolve per-tensor shardings + insert collectives
 # (repro.dist) on the final optimized graph; a no-op without a mesh.
@@ -101,4 +110,5 @@ __all__ = [
     "MemoryPlan",
     "optimize_layout",
     "propagate_sharding",
+    "quantize",
 ]

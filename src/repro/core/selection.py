@@ -84,7 +84,20 @@ def _select_dense(node, in_spec, batch_size: int, n: int) -> KernelChoice:
     # Granules and the VMEM working set are dtype-parametrized: bf16
     # packs twice the elements per byte, so its sublane granule doubles
     # and its K-dim block cap grows instead of idling half the budget.
-    itemsize = int(np.dtype(in_spec.dtype).itemsize)
+    # A quant.* annotation overrides the tensor dtype — the kernel will
+    # consume int8 (itemsize 1) or bf16 (2) operands regardless of what
+    # flows in as f32.
+    qm = node.attrs.get("quant.mode")
+    itemsize = {"int8": 1, "bf16": 2}.get(
+        qm, int(np.dtype(in_spec.dtype).itemsize))
+    if qm == "int8" and not _ON_TPU:
+        # Backend-aware prior: off-TPU the Pallas q8 kernel only runs in
+        # interpret mode, while the reference lax int8 lowering compiles
+        # to real vectorized code — the measured winner by a wide margin.
+        return KernelChoice(
+            node.name, "dense", "lax.dot",
+            "int8 site off-TPU: reference lax int8 lowering beats "
+            "interpret-mode Pallas")
     sub = sublane_for(itemsize)
     m_pad, k_pad, n_pad = ceil_to(m, sub), ceil_to(k, LANE), ceil_to(n, LANE)
 
@@ -104,8 +117,10 @@ def _select_dense(node, in_spec, batch_size: int, n: int) -> KernelChoice:
             node.name, "dense", "lax.dot",
             f"sub-granule matmul: lane padding wastes {waste:.0f}x "
             f"(> {MAX_PAD_WASTE:.0f}x) at M={m} K={k} N={n}")
+    kernel = ("pallas.fused_matmul_q8" if qm == "int8"
+              else "pallas.fused_matmul")
     return KernelChoice(
-        node.name, "dense", "pallas.fused_matmul",
+        node.name, "dense", kernel,
         f"M={m} K={k} N={n} tiles to ({bm},{bk},{bn}), "
         f"{vmem // 1024} KiB VMEM, {waste:.1f}x pad waste",
         block=(bm, bk, bn))

@@ -81,13 +81,27 @@ class SimpleNN:
             return jnp.broadcast_to(v, (batch,) + v.shape)
         if op == "conv2d":
             k = jnp.asarray(g.params[node.params["kernel"]])
-            y = jax.lax.conv_general_dilated(
-                ins[0],
-                k,
-                window_strides=node.attrs["strides"],
-                padding=_lax_padding(node.attrs["padding"]),
-                dimension_numbers=("NHWC", "HWIO", "NHWC"),
-            )
+            qm = node.attrs.get("quant.mode")
+            if qm == "int8":
+                from ..kernels import qmath
+                y = qmath.conv2d_q8(
+                    ins[0], k, node.attrs["quant.x_scale"],
+                    node.attrs["quant.w_scale"],
+                    strides=node.attrs["strides"],
+                    padding=_lax_padding(node.attrs["padding"]))
+            elif qm == "bf16":
+                from ..kernels import qmath
+                y = qmath.conv2d_bf16(
+                    ins[0], k, strides=node.attrs["strides"],
+                    padding=_lax_padding(node.attrs["padding"]))
+            else:
+                y = jax.lax.conv_general_dilated(
+                    ins[0],
+                    k,
+                    window_strides=node.attrs["strides"],
+                    padding=_lax_padding(node.attrs["padding"]),
+                    dimension_numbers=("NHWC", "HWIO", "NHWC"),
+                )
             if "bias" in node.params:
                 y = y + jnp.asarray(g.params[node.params["bias"]])
             return y
@@ -107,9 +121,26 @@ class SimpleNN:
             return y
         if op == "dense":
             k = jnp.asarray(g.params[node.params["kernel"]])
+            b = (jnp.asarray(g.params[node.params["bias"]])
+                 if "bias" in node.params else None)
+            # quant.* annotations change the node's semantics, so even
+            # the oracle honors them — through the same shared kernel
+            # wrappers the compiled targets use (epilogues still apply
+            # separately in __call__; SimpleNN never fuses).
+            qm = node.attrs.get("quant.mode")
+            if qm == "int8":
+                from ..kernels.fused_matmul.ops import fused_matmul_q8
+                return fused_matmul_q8(
+                    ins[0], k, b,
+                    x_scale=node.attrs["quant.x_scale"],
+                    w_scales=node.attrs["quant.w_scale"])
+            if qm == "bf16":
+                from ..kernels.fused_matmul.ops import fused_matmul
+                from ..kernels.qmath import bf16_cast_pair
+                return fused_matmul(*bf16_cast_pair(ins[0], k), b)
             y = ins[0] @ k
-            if "bias" in node.params:
-                y = y + jnp.asarray(g.params[node.params["bias"]])
+            if b is not None:
+                y = y + b
             return y
         if op == "batchnorm":
             gamma = jnp.asarray(g.params[node.params["gamma"]])

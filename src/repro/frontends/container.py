@@ -38,6 +38,10 @@ def save_model(graph: Graph, path) -> None:
             for n in graph.nodes
         ],
     }
+    if graph.quant:
+        # Graph-level quantization record (mode + decision counts);
+        # the per-site scales live in the node attrs above.
+        header["quant"] = _jsonify(graph.quant)
     arrays = {f"param::{k}": v for k, v in graph.params.items()}
     arrays["__header__"] = np.frombuffer(
         json.dumps(header).encode(), dtype=np.uint8)
@@ -63,6 +67,8 @@ def load_model(path) -> Graph:
                     epilogue_attrs=_tuplify(nd["epilogue_attrs"]))
         g.nodes.append(node)
     g.rebuild_index()
+    if header.get("quant"):
+        g.quant = header["quant"]
     names = header.get("output_names")
     if names and names != header["outputs"]:
         g.set_outputs(dict(zip(names, header["outputs"])))

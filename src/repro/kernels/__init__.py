@@ -1,3 +1,9 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas kernels for the compiler's compute hot-spots.
+
+Each kernel family is a package with ``kernel.py`` (the Pallas
+implementation), ``ops.py`` (the public dispatch that falls back to
+``ref.py`` off-TPU), and ``ref.py`` (the pure-lax reference the
+golden tests compare against).  ``tiles.py`` owns tile geometry and
+the block-candidate grid; ``qmath.py`` owns the shared quantization
+arithmetic (scales, casts, int8 helpers).
+"""

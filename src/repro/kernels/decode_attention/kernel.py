@@ -88,6 +88,9 @@ def decode_attention_p(
     bs: int = DEFAULT_BS,
     interpret: bool = True,
 ) -> jnp.ndarray:
+    """Pallas single-token decode attention over a padded KV cache:
+    one grid step per (batch, kv-head), KV streamed in ``bs``-row
+    tiles, rows past each sequence's length masked in-kernel."""
     b, h, d = q.shape
     _, s, hkv, _ = k_cache.shape
     g = h // hkv

@@ -18,6 +18,8 @@ def decode_attention_ref(
     scale: Optional[float] = None,
     fast: bool = False,
 ) -> jnp.ndarray:
+    """Pure-lax grouped-query decode attention — the golden reference
+    the Pallas kernel is tested against (length-masked, f32)."""
     b, h, d = q.shape
     _, s, hkv, _ = k_cache.shape
     g = h // hkv

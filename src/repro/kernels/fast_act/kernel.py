@@ -17,7 +17,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# Tile shape: sublane × lane aligned for f32.
+# Tile shape: sublane × lane aligned for f32.  bf16 inputs double the
+# row cap (same VMEM bytes — the register file packs narrow elements
+# deeper, exactly the tiles.py granule story).
 BLOCK_ROWS = 256
 BLOCK_COLS = 128
 
@@ -48,22 +50,30 @@ _BODIES = {"exp": _exp_body, "tanh": _tanh_body, "sigmoid": _sigmoid_body}
 
 
 def _elementwise_kernel(x_ref, o_ref, *, fn: str):
-    o_ref[...] = _BODIES[fn](x_ref[...])
+    # Compute in f32 regardless of the tile dtype: the Schraudolph exp
+    # puns f32 bit patterns, and the polynomial coefficients are tuned
+    # for f32 — bf16 tiles cast on entry and round once on exit.
+    v = x_ref[...].astype(jnp.float32)
+    o_ref[...] = _BODIES[fn](v).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("fn", "interpret", "block"))
 def fast_act_2d(x: jnp.ndarray, fn: str, interpret: bool = True,
                 block=None) -> jnp.ndarray:
-    """Apply a fast activation to a 2D f32 array via Pallas.
+    """Apply a fast activation to a 2D f32/bf16 array via Pallas (the
+    output dtype matches the input; internals are f32 either way).
 
     The wrapper pads to tile multiples (compile-time shapes, so the pad
     is free to fuse) and slices back.  ``block=(rows, cols)`` overrides
-    the default tile caps (the autotuner's measured geometry).
+    the default tile caps (the autotuner's measured geometry).  bf16
+    tiles default to double the row cap: half the bytes per row means
+    the same VMEM working set covers twice the rows.
     """
     m, n = x.shape
-    rows_cap, cols_cap = block if block is not None else (BLOCK_ROWS,
-                                                          BLOCK_COLS)
-    bm = min(rows_cap, max(8, m))
+    narrow = x.dtype == jnp.bfloat16
+    rows_cap, cols_cap = block if block is not None else (
+        BLOCK_ROWS * (2 if narrow else 1), BLOCK_COLS)
+    bm = min(rows_cap, max(16 if narrow else 8, m))
     bn = min(cols_cap, max(128, n)) if n >= 128 else n
     pm = -(-m // bm) * bm
     pn = -(-n // bn) * bn
@@ -73,7 +83,7 @@ def fast_act_2d(x: jnp.ndarray, fn: str, interpret: bool = True,
         grid=(pm // bm, pn // bn),
         in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((pm, pn), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((pm, pn), x.dtype),
         interpret=interpret,
     )(xp)
     return out[:m, :n]

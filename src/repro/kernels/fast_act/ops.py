@@ -28,7 +28,13 @@ def fast_act(x: jnp.ndarray, fn: str, use_pallas: bool = False,
     ``block`` overrides the default (rows, cols) tile of the Pallas
     kernel — the autotuner passes the measured winner here.
     """
+    # bf16 rides the kernel as bf16 tiles (half the bytes, double the
+    # row block); the math is f32 internally on both paths so the two
+    # agree to one output rounding.
+    narrow = x.dtype == jnp.bfloat16
     if not use_pallas:
+        if narrow:
+            return ref.FAST[fn](x.astype(jnp.float32)).astype(jnp.bfloat16)
         return ref.FAST[fn](x)
     shape = x.shape
     if x.ndim == 0:
@@ -37,12 +43,14 @@ def fast_act(x: jnp.ndarray, fn: str, use_pallas: bool = False,
         x2 = x.reshape(1, -1)
     else:
         x2 = x.reshape(-1, shape[-1])
-    y = fast_act_2d(x2.astype(jnp.float32), fn, interpret=not _ON_TPU,
-                    block=block)
+    if not narrow:
+        x2 = x2.astype(jnp.float32)
+    y = fast_act_2d(x2, fn, interpret=not _ON_TPU, block=block)
     return y.reshape(shape)
 
 
 def fast_softmax(x: jnp.ndarray, axis: int = -1, use_pallas: bool = False) -> jnp.ndarray:
+    """Max-subtracted softmax built on the fast exp (paper §3.4)."""
     if not use_pallas:
         return ref.fast_softmax(x, axis=axis)
     m = jnp.max(x, axis=axis, keepdims=True)

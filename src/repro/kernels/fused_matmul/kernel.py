@@ -174,10 +174,129 @@ def fused_matmul_p(
     )(*operands)
 
 
-def _vmem_scratch(shape):
+def _q8_matmul_kernel(*refs, nk: int, fn: Optional[str], fast: bool,
+                      has_bias: bool, has_affine: bool, w_layout: str,
+                      attrs):
+    """Int8 body: i32 VMEM accumulation of int8 tiles, then — on the
+    last K step, while the tile is still in VMEM — one f32 dequant
+    multiply by the fused ``s_x * s_w`` vector followed by the standard
+    epilogue.  The i32 sum is exact, so blocking order cannot perturb
+    the result and the lax reference is bit-identical."""
+    if has_bias and has_affine:
+        x_ref, w_ref, deq_ref, b_ref, s_ref, off_ref, o_ref, acc_ref = refs
+        affine = (s_ref, off_ref)
+    elif has_bias:
+        x_ref, w_ref, deq_ref, b_ref, o_ref, acc_ref = refs
+        affine = None
+    elif has_affine:
+        x_ref, w_ref, deq_ref, s_ref, off_ref, o_ref, acc_ref = refs
+        b_ref = None
+        affine = (s_ref, off_ref)
+    else:
+        x_ref, w_ref, deq_ref, o_ref, acc_ref = refs
+        b_ref = None
+        affine = None
+
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if w_layout == "io":  # (K, N)
+        acc_ref[...] += jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.int32
+        )
+    else:  # "oi": (N, K)
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[...],
+            w_ref[...],
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        y = acc_ref[...].astype(jnp.float32) * deq_ref[...]
+        o_ref[...] = _apply_epilogue(
+            y, b_ref, fn, fast, affine, attrs
+        ).astype(o_ref.dtype)
+
+
+def fused_matmul_q8_p(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    deq: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    scale: Optional[jnp.ndarray] = None,
+    offset: Optional[jnp.ndarray] = None,
+    *,
+    fn: Optional[str] = None,
+    fast: bool = False,
+    w_layout: str = "io",
+    block: Tuple[int, int, int] = (DEFAULT_BM, DEFAULT_BK, DEFAULT_BN),
+    interpret: bool = True,
+    attrs: Optional[dict] = None,
+) -> jnp.ndarray:
+    """Raw int8 pallas_call: operands must already be quantized and
+    tile-aligned to the itemsize-1 granule (sublane 32).
+
+    xq: (M, K) int8;  wq: (K, N) or (N, K) int8 per w_layout;
+    deq: (N,) f32 fused dequant scales (``s_x * s_w``); bias/scale/
+    offset: (N,) f32 or None.  Accumulates in an i32 VMEM scratch and
+    returns (M, N) f32.
+    """
+    m, k = xq.shape
+    n = wq.shape[1] if w_layout == "io" else wq.shape[0]
+    bm, bk, bn = block
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, block)
+    nk = k // bk
+    grid = (m // bm, n // bn, nk)
+
+    in_specs = [pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk))]
+    if w_layout == "io":
+        in_specs.append(pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)))
+    else:
+        in_specs.append(pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk)))
+    in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+    operands = [xq, wq, deq.reshape(1, n)]
+    has_bias = bias is not None
+    has_affine = scale is not None
+    if has_bias:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        operands.append(bias.reshape(1, n))
+    if has_affine:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        operands.extend([scale.reshape(1, n), offset.reshape(1, n)])
+
+    kernel = functools.partial(
+        _q8_matmul_kernel,
+        nk=nk,
+        fn=fn,
+        fast=fast,
+        has_bias=has_bias,
+        has_affine=has_affine,
+        w_layout=w_layout,
+        attrs=attrs or {},
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pl.pallas_tpu.VMEM((bm, bn), jnp.int32)]
+        if hasattr(pl, "pallas_tpu")
+        else [_vmem_scratch((bm, bn), jnp.int32)],
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(*operands)
+
+
+def _vmem_scratch(shape, dtype=jnp.float32):
     from jax.experimental.pallas import tpu as pltpu
 
-    return pltpu.VMEM(shape, jnp.float32)
+    return pltpu.VMEM(shape, dtype)
 
 
 def _compiler_params():

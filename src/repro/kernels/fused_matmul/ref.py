@@ -22,6 +22,8 @@ def fused_matmul_ref(
     w_layout: str = "io",
     attrs: Optional[dict] = None,
 ) -> jnp.ndarray:
+    """Pure-lax matmul + bias + activation + post-affine epilogue — the
+    reference the fused Pallas kernel must match bit-for-bit."""
     attrs = attrs or {}
     if w_layout == "oi":
         y = x @ w.T
@@ -49,3 +51,62 @@ def fused_matmul_ref(
     if scale is not None:
         y = y * scale + offset
     return y
+
+
+def _epilogue_chain(y, bias, scale, offset, fn, fast, attrs):
+    """The f32 epilogue chain alone (bias → activation → affine) —
+    shared by the int8 path, which produces ``y`` by dequantizing an
+    exact i32 accumulator instead of an f32 matmul."""
+    attrs = attrs or {}
+    if bias is not None:
+        y = y + bias
+    if fn and fn != "linear":
+        if fn == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif fn == "relu6":
+            y = jnp.clip(y, 0.0, 6.0)
+        elif fn == "leaky_relu":
+            y = jnp.where(y >= 0, y, attrs.get("alpha", 0.01) * y)
+        elif fn == "hard_sigmoid":
+            y = jnp.clip(y * 0.2 + 0.5, 0.0, 1.0)
+        elif fn == "elu":
+            y = jnp.where(y >= 0, y, jnp.expm1(y))
+        elif fn == "tanh":
+            y = fast_ref.cf_tanh(y) if fast else jnp.tanh(y)
+        elif fn == "sigmoid":
+            y = fast_ref.cf_sigmoid(y) if fast else jax.nn.sigmoid(y)
+        else:
+            raise NotImplementedError(fn)
+    if scale is not None:
+        y = y * scale + offset
+    return y
+
+
+def fused_matmul_q8_ref(
+    xq: jnp.ndarray,
+    wq: jnp.ndarray,
+    deq: jnp.ndarray,
+    bias: Optional[jnp.ndarray] = None,
+    scale: Optional[jnp.ndarray] = None,
+    offset: Optional[jnp.ndarray] = None,
+    *,
+    fn: Optional[str] = None,
+    fast: bool = False,
+    w_layout: str = "io",
+    attrs: Optional[dict] = None,
+) -> jnp.ndarray:
+    """Reference int8 matmul: exact i32 accumulation of already
+    quantized operands, one f32 dequant multiply (``deq`` = per-channel
+    ``s_x * s_w``), then the standard f32 epilogue chain.
+
+    Because the i32 sum is exact (no rounding, any blocking order) and
+    the dequant is a single f32 multiply, this is bit-identical to the
+    Pallas q8 kernel by construction — the lax lowering every
+    non-pallas target uses IS the golden semantics.
+    """
+    dims = ((( (xq.ndim - 1),), ((1,) if w_layout == "oi" else (0,))),
+            ((), ()))
+    acc = jax.lax.dot_general(xq, wq, dimension_numbers=dims,
+                              preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * deq
+    return _epilogue_chain(y, bias, scale, offset, fn, fast, attrs)

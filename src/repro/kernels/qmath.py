@@ -1,0 +1,107 @@
+"""Shared quantization arithmetic — one copy of the numerics.
+
+Every consumer of a ``quant.*`` annotation — the SimpleNN oracle, the
+generic lowering rules, the Pallas kernel wrappers, and the quantize
+pass's own calibration accuracy checks — routes through the helpers
+here, so "int8 dense" means *exactly* the same arithmetic on every
+target.  That is what makes the golden interpret-vs-jit-vs-pallas
+identity tests possible: int8 accumulation is exact in i32 and the
+dequant is a single f32 multiply, so as long as the quantize/dequant
+expressions are literally shared, the targets agree bit-for-bit.
+
+Conventions (symmetric, TensorRT-style):
+
+* activations: one per-tensor scale ``s_x = absmax / 127`` recorded by
+  the calibration walk; ``q = clip(round(x / s_x), -127, 127)``.
+* weights: per-output-channel scales ``s_w[n] = absmax_n / 127``
+  computed from the f32 weights at annotation time (no calibration
+  needed — weights are static).
+* zero points are always 0 (symmetric): the graphs this compiler
+  targets are activation-centric (relu/tanh around 0), and symmetric
+  quantization keeps the matmul a plain int8×int8→i32 product with a
+  single fused dequant multiply — no zero-point correction terms.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: Symmetric int8 clip range (−127..127; −128 is excluded so the range
+#: is symmetric and ``-q`` is always representable).
+Q8_MAX = 127.0
+#: Scale floor — an all-zero tensor quantizes with this scale instead
+#: of dividing by zero.
+EPS = 1e-12
+
+
+def tensor_scale(absmax: float) -> float:
+    """Per-tensor symmetric scale from a calibrated |x| maximum."""
+    return max(float(absmax), EPS) / Q8_MAX
+
+
+def channel_scales(w: np.ndarray, axis: int) -> np.ndarray:
+    """Per-channel symmetric scales: |w| max reduced over every axis
+    except ``axis`` (the output-channel axis), divided by 127."""
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis % w.ndim)
+    absmax = np.abs(np.asarray(w, dtype=np.float32)).max(axis=reduce_axes)
+    return np.maximum(absmax, EPS).astype(np.float32) / np.float32(Q8_MAX)
+
+
+def quantize_q8(x: jnp.ndarray, scale) -> jnp.ndarray:
+    """``clip(round(x / scale), ±127) -> int8``.  ``scale`` broadcasts
+    (a scalar for activations, a shaped array for per-channel weights).
+    This is the ONE quantize expression — round-half-to-even via
+    ``jnp.round``, division not reciprocal-multiply — shared by every
+    target so quantized operands are bitwise identical everywhere."""
+    q = jnp.clip(jnp.round(x / scale), -Q8_MAX, Q8_MAX)
+    return q.astype(jnp.int8)
+
+
+def dequant_scales(x_scale: float, w_scales) -> jnp.ndarray:
+    """The fused f32 dequant vector ``s_x * s_w[n]``: one multiply per
+    output channel, applied once to the exact i32 accumulator."""
+    return (jnp.float32(x_scale)
+            * jnp.asarray(w_scales, dtype=jnp.float32))
+
+
+def conv2d_q8(x: jnp.ndarray, k: jnp.ndarray, x_scale: float, w_scales,
+              *, strides, padding) -> jnp.ndarray:
+    """Int8 NHWC/HWIO convolution: quantize both operands with the
+    calibrated scales, accumulate exactly in i32, dequantize with one
+    per-channel f32 multiply.  ``padding`` is the already-resolved lax
+    padding (string or explicit pairs).  Shared verbatim by the oracle
+    and the lowering rule — exact i32 accumulation makes the two
+    bit-identical regardless of how XLA tiles the reduction."""
+    ws = jnp.asarray(w_scales, dtype=jnp.float32)
+    xq = quantize_q8(x, jnp.float32(x_scale))
+    kq = quantize_q8(k.astype(jnp.float32), ws[None, None, None, :])
+    acc = jax.lax.conv_general_dilated(
+        xq, kq, window_strides=strides, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * dequant_scales(x_scale, ws)
+
+
+def conv2d_bf16(x: jnp.ndarray, k: jnp.ndarray, *, strides, padding
+                ) -> jnp.ndarray:
+    """Bf16 NHWC/HWIO convolution: round both operands to bfloat16,
+    accumulate in f32 (``preferred_element_type``)."""
+    xq, kq = bf16_cast_pair(x, k)
+    return jax.lax.conv_general_dilated(
+        xq, kq, window_strides=strides, padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        preferred_element_type=jnp.float32)
+
+
+def bf16_cast_pair(x: jnp.ndarray, w: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The bf16 mode's only transformation: round both operands to
+    bfloat16.  Accumulation stays f32 (``preferred_element_type``) on
+    every path, so bf16 compute is "quantize the operands, keep the
+    reduction exact-ish" — the cheap mode the paper's static-shapes
+    argument gets for free."""
+    return x.astype(jnp.bfloat16), w.astype(jnp.bfloat16)

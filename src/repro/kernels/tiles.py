@@ -41,11 +41,18 @@ def sublane_for(itemsize: int = 4) -> int:
     return max(SUBLANE, 32 // max(1, itemsize))
 
 
-def block_vmem_bytes(bm: int, bk: int, bn: int, itemsize: int = 4) -> int:
+def block_vmem_bytes(bm: int, bk: int, bn: int, itemsize: int = 4,
+                     acc_itemsize: int = 4) -> int:
     """Resident bytes of one fused-matmul block: x(bm,bk) + w(bk,bn)
-    tiles in the operand dtype, plus the f32 accumulator and output
-    tiles (the kernel always accumulates in f32)."""
-    return itemsize * (bm * bk + bk * bn) + 4 * 2 * (bm * bn)
+    tiles in the operand dtype, plus the accumulator and output tiles.
+
+    ``acc_itemsize`` is the accumulator/output element width — 4 for
+    the f32 kernels *and* for the int8 kernel (i32 scratch, f32 out);
+    it is a parameter rather than a constant so a future f16-out or
+    i64-accumulate variant budgets correctly instead of inheriting the
+    f32 assumption.
+    """
+    return itemsize * (bm * bk + bk * bn) + acc_itemsize * 2 * (bm * bn)
 
 
 def pick_block(m: int, k: int, n: int, itemsize: int = 4

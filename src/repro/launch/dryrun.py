@@ -1,11 +1,8 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
-The two lines above MUST run before any other import — jax locks the
-device count at first init, and the production meshes need 512
-placeholder devices (2 pods × 16 × 16).
+The ``XLA_FLAGS`` line below MUST run before any other import — jax
+locks the device count at first init, and the production meshes need
+512 placeholder devices (2 pods × 16 × 16).
 
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-14b \
@@ -18,6 +15,9 @@ Each cell writes a JSON artifact under benchmarks/artifacts/dryrun/
 EXPERIMENTS.md §Dry-run/§Roofline and benchmarks/roofline.py read.
 """
 
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
 import argparse
 import json
 import sys
@@ -29,6 +29,8 @@ import jax
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str,
              out_dir: str, overrides: dict = None) -> dict:
+    """Lower + compile one (arch, shape, mesh) cell and write its
+    JSON artifact (memory/cost/collective analysis) under *out_dir*."""
     from repro.configs import SHAPES, cell_supported, get_config
     from repro.launch import cells
     from repro.launch.mesh import make_production_mesh
@@ -78,6 +80,8 @@ def _write(out_dir: str, rec: dict) -> None:
 
 
 def main() -> int:
+    """CLI entry: run one cell (``--arch/--shape/--mesh``) or sweep
+    ``--all`` supported cells, returning the number of failures."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)

@@ -80,6 +80,7 @@ def _elems(dims: str) -> int:
 
 @dataclasses.dataclass
 class Op:
+    """One HLO instruction: name, result type string, opcode, raw line."""
     name: str
     type_str: str          # full result type (may be a tuple)
     opcode: str
@@ -88,12 +89,15 @@ class Op:
 
 @dataclasses.dataclass
 class Computation:
+    """A named HLO computation: its ops and param name -> type map."""
     name: str
     ops: List[Op]
     params: Dict[str, str]           # param name -> type string
 
 
 def parse_hlo(text: str) -> Dict[str, Computation]:
+    """Parse HLO text into ``{computation name: Computation}`` (line
+    grammar only — headers end with ``{``, ops contain ``\" = \"``)."""
     comps: Dict[str, Computation] = {}
     cur: Optional[Computation] = None
     for raw in text.splitlines():
@@ -294,6 +298,8 @@ def flops_from_pre(text: str, chips: int = 1) -> Tuple[float, int]:
 # Bytes + collectives from the post-optimization module (per-device)
 # ---------------------------------------------------------------------------
 def bytes_from_post(text: str) -> Tuple[float, Dict[str, float], int]:
+    """Trip-count-weighted (hbm_bytes, collective bytes by kind,
+    unresolved-while count) from post-optimization per-device HLO."""
     comps = parse_hlo(text)
     mult, unresolved = _multipliers(comps)
     coll = {k: 0.0 for k in _COLLECTIVES}
@@ -338,12 +344,15 @@ def bytes_from_post(text: str) -> Tuple[float, Dict[str, float], int]:
 
 @dataclasses.dataclass
 class HloCost:
+    """Per-device cost rollup combining both HLO sources (see module
+    docstring); ``unresolved_whiles > 0`` flags an untrusted count."""
     flops: float                       # per-device
     collective_bytes: Dict[str, float]
     hbm_bytes: float
     unresolved_whiles: int
 
     def as_dict(self) -> Dict:
+        """JSON-serializable form for the dry-run artifacts."""
         return {"flops": self.flops,
                 "collective_bytes": self.collective_bytes,
                 "hbm_bytes": self.hbm_bytes,
@@ -351,6 +360,8 @@ class HloCost:
 
 
 def analyze_lowered(lowered, compiled, chips: int) -> HloCost:
+    """Analyze a jax ``lowered``/``compiled`` pair: exact FLOPs from
+    the pre-optimization HLO, bytes from the post-optimization HLO."""
     flops_global, unres_pre = flops_from_pre(lowered.as_text("hlo"), chips)
     hbm, coll, unres_post = bytes_from_post(compiled.as_text())
     return HloCost(flops=flops_global / max(chips, 1),

@@ -40,6 +40,8 @@ def parse_sharding_rules(text):
 
 
 def main(argv=None) -> int:
+    """CLI entry: compile ``--arch`` for the engine target, serve a
+    synthetic queue, print (or ``--json``-dump) the metrics summary."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-14b")
     ap.add_argument("--smoke", action="store_true")
@@ -59,6 +61,17 @@ def main(argv=None) -> int:
     ap.add_argument("--prefix-cache", type=int, default=0,
                     help="shared prompt-head KV snapshots to keep "
                          "(requires --prefill-chunk); 0 = off")
+    ap.add_argument("--precision", default="exact",
+                    choices=("exact", "fast", "f32", "bf16"),
+                    help="compiled precision; bf16 = weight-only "
+                         "storage cast for the engine target (int8/"
+                         "mixed need the graph pipeline and are "
+                         "rejected by the engine target) — the active "
+                         "precision + decision counts land in "
+                         "summary()['precision']")
+    ap.add_argument("--calibrate", type=int, default=None, metavar="N",
+                    help="calibration batches, forwarded to "
+                         "CompileOptions for graph-routed precisions")
     ap.add_argument("--no-fold", action="store_true")
     ap.add_argument("--buckets", action="store_true", default=None,
                     help="shape-polymorphic serving: decode at the best "
@@ -98,7 +111,8 @@ def main(argv=None) -> int:
 
     t0 = time.perf_counter()
     exe = repro.compile(cfg, repro.CompileOptions(
-        target="engine", mesh=mesh, sharding_rules=rules))
+        target="engine", precision=args.precision,
+        calibrate=args.calibrate, mesh=mesh, sharding_rules=rules))
     sched = repro.serve(exe, repro.SchedulerOptions(
         slots=args.slots, max_len=args.max_len, admission=args.admission,
         fold=not args.no_fold, buckets=policy,
@@ -129,6 +143,11 @@ def main(argv=None) -> int:
               f"mean TTFT {(summary['mean_ttft'] or 0) * 1e3:.0f}ms, "
               f"occupancy {(summary['mean_batch_occupancy'] or 0):.2f}"
               f"/{args.slots})", flush=True)
+        if "precision" in summary:
+            pr = summary["precision"]
+            print(f"[serve] precision {pr['precision']}"
+                  + (f", decisions {pr['decisions']}"
+                     if pr.get("decisions") else ""), flush=True)
         if "runtime" in summary:
             rt = summary["runtime"]
             print(f"[serve] buckets: {rt['bucket_hits']} hits, "

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 
 
 def main(argv=None) -> int:
+    """CLI entry: run the training loop for ``--arch`` with optional
+    microbatching, grad compression and checkpointing."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="minicpm-2b")
     ap.add_argument("--smoke", action="store_true",

@@ -187,10 +187,16 @@ class Scheduler:
                  sampler: Optional[Callable] = None,
                  clock: Callable[[], float] = time.perf_counter,
                  engine_worker: str = "thread",
-                 device_source: Optional[Callable] = None) -> None:
+                 device_source: Optional[Callable] = None,
+                 precision_info: Optional[dict] = None) -> None:
         self.model = model
         self.cfg = model.cfg
         self.options = options
+        # Audit record from the compiled executable (repro.serve fills
+        # it in): active precision + per-site decision counts, surfaced
+        # verbatim in summary()["precision"].
+        self.precision_info = dict(precision_info) if precision_info \
+            else None
         if options.fold:
             from ..inference.fold_norms import fold_norms
             params, self.fold_report = fold_norms(self.cfg, params)
@@ -906,8 +912,9 @@ class Scheduler:
     # -- reporting -----------------------------------------------------
     def summary(self) -> dict:
         """Aggregate metrics: counters and TTFT/queue percentiles, plus
-        runtime engine stats, chunked-prefill and prefix-cache sections
-        when those features are active."""
+        runtime engine stats, the active-precision audit record, and
+        chunked-prefill / prefix-cache sections when those features are
+        active."""
         engines = {}
         if self._decode_engine is not None:
             engines["decode"] = self._decode_engine.stats()
@@ -926,6 +933,8 @@ class Scheduler:
             rt["pad_waste_frac"] = (pad / total) if total else 0.0
             rt.update(engines)
             out["runtime"] = rt
+        if self.precision_info is not None:
+            out["precision"] = dict(self.precision_info)
         if self.options.prefill_chunk is not None:
             out["chunked_prefill"] = {
                 "enabled": self._chunk_engine is not None,

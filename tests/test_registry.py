@@ -36,8 +36,8 @@ def _cnn(seed=0):
 def test_default_pipeline_resolution_matches_legacy_order():
     assert DEFAULT_PIPELINE == (
         "canonicalize", "fold_constants", "fuse_pad", "fuse_activation",
-        "fold_batchnorm", "fuse_activation.post_bn", "optimize_layout",
-        "propagate_sharding")
+        "fold_batchnorm", "fuse_activation.post_bn", "quantize",
+        "optimize_layout", "propagate_sharding")
 
 
 def test_explicit_pipeline_allows_base_names_and_duplicates():
